@@ -1,0 +1,98 @@
+"""Kernel microbenchmarks: wall time of the jnp reference path on CPU plus
+interpret-mode correctness deltas for each Pallas kernel.
+
+NOTE: this container is CPU-only; Pallas interpret mode executes the kernel
+body in Python, so its wall time is NOT meaningful TPU performance — the
+honest number on this host is the XLA-CPU reference timing plus the
+max-abs-error of the kernel against its oracle. TPU timings come from the
+roofline model in benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench_flash_attention() -> Tuple[float, Dict]:
+    from repro.kernels.flash_attention.ops import flash_attention
+    key = jax.random.PRNGKey(0)
+    B, S, H, K, hd = 1, 1024, 8, 2, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    us = _time(lambda a, b, c: flash_attention(a, b, c, impl="ref"), q, k, v)
+    o_ref = flash_attention(q, k, v, impl="ref")
+    o_pal = flash_attention(q, k, v, impl="interpret", block_q=256,
+                            block_k=256)
+    err = float(jnp.max(jnp.abs(o_ref - o_pal)))
+    flops = 2 * 2 * B * H * S * S * hd / 2  # causal
+    return us, {"max_err_vs_oracle": err,
+                "ref_gflops_cpu": round(flops / us / 1e3, 2)}
+
+
+def bench_decode_attention() -> Tuple[float, Dict]:
+    from repro.kernels.decode_attention.ops import decode_attention
+    key = jax.random.PRNGKey(1)
+    B, H, K, hd, L = 4, 8, 4, 128, 8192
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    ck = jax.random.normal(ks[1], (B, L, K, hd), jnp.float32)
+    cv = jax.random.normal(ks[2], (B, L, K, hd), jnp.float32)
+    sp = jnp.arange(L)
+    us = _time(lambda a, b, c: decode_attention(a, b, c, sp, L - 1,
+                                                impl="ref"), q, ck, cv)
+    o_ref = decode_attention(q, ck, cv, sp, L - 1, impl="ref")
+    o_pal = decode_attention(q, ck, cv, sp, L - 1, impl="interpret",
+                             block_k=512)
+    err = float(jnp.max(jnp.abs(o_ref - o_pal)))
+    bytes_moved = 2 * B * L * K * hd * 4
+    return us, {"max_err_vs_oracle": err,
+                "ref_gbps_cpu": round(bytes_moved / us / 1e3, 2)}
+
+
+def bench_rglru_scan() -> Tuple[float, Dict]:
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    key = jax.random.PRNGKey(2)
+    B, S, W = 2, 2048, 2560
+    ks = jax.random.split(key, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))) * 0.2 + 0.79
+    b = jax.random.normal(ks[1], (B, S, W)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, W))
+    us = _time(lambda x, y, z: rglru_scan(x, y, z, impl="ref"), a, b, h0)
+    h_ref = rglru_scan(a, b, h0, impl="ref")
+    h_pal = rglru_scan(a, b, h0, impl="interpret", block_s=256, block_w=512)
+    err = float(jnp.max(jnp.abs(h_ref - h_pal)))
+    return us, {"max_err_vs_oracle": err,
+                "ref_gbps_cpu": round(3 * B * S * W * 4 / us / 1e3, 2)}
+
+
+def bench_mlstm_chunk() -> Tuple[float, Dict]:
+    from repro.kernels.mlstm_chunk.ops import mlstm_chunk
+    from repro.kernels.mlstm_chunk.ref import mlstm_chunk_reference
+    key = jax.random.PRNGKey(3)
+    B, S, H, dqk, dv = 1, 512, 4, 128, 256
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, dqk), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, dqk), jnp.float32) / dqk ** 0.5
+    v = jax.random.normal(ks[2], (B, S, H, dv), jnp.float32)
+    il = jax.random.normal(ks[3], (B, S, H), jnp.float32)
+    fl = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 2.0)
+    us = _time(lambda *xs: mlstm_chunk(*xs, impl="ref"), q, k, v, il, fl)
+    o_ref = mlstm_chunk(q, k, v, il, fl, impl="ref")
+    o_pal = mlstm_chunk(q, k, v, il, fl, impl="interpret", chunk=128)
+    err = float(jnp.max(jnp.abs(o_ref - o_pal)))
+    return us, {"max_err_vs_oracle": err}

@@ -1,0 +1,101 @@
+"""Paper-figure benchmarks (one function per paper table/figure).
+
+fig5  — WS resource consumption under the World-Cup-like trace (§III-C)
+fig7  — completed jobs + avg turnaround vs cluster size, SC vs DC (§III-D)
+fig8  — killed jobs vs cluster size (§III-D)
+summary — the 76.9%-cost consolidation claim + validation booleans
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.experiment import (DC_SIZES, SC_TOTAL, run_experiment,
+                                   validate_claims)
+from repro.core.traces import (WS_CAPACITY_RPS, synthetic_worldcup_load,
+                               worldcup_demand_events)
+from repro.core.types import SimConfig
+from repro.core.ws_cms import demand_from_load
+
+_CACHE: Dict = {}
+
+
+def _experiment(seed=0, preempt="kill"):
+    key = (seed, preempt)
+    if key not in _CACHE:
+        _CACHE[key] = run_experiment(
+            seed=seed, cfg=SimConfig(preempt_mode=preempt))
+    return _CACHE[key]
+
+
+def fig5_ws_consumption() -> Tuple[float, Dict]:
+    t0 = time.time()
+    load, dt = synthetic_worldcup_load(seed=0)
+    demand = demand_from_load(load, dt, WS_CAPACITY_RPS)
+    events = worldcup_demand_events(seed=0)
+    us = (time.time() - t0) * 1e6
+    derived = {
+        "peak_instances": int(demand.max()),
+        "mean_instances": float(demand.mean()),
+        "p50_instances": float(np.median(demand)),
+        "demand_change_events": len(events),
+        "peak_to_normal_load": float(load.max() / np.median(load)),
+    }
+    return us, derived
+
+
+def fig7_completed_turnaround(preempt="kill") -> Tuple[float, Dict]:
+    t0 = time.time()
+    res = _experiment(0, preempt)
+    us = (time.time() - t0) * 1e6
+    sc = res["SC"]
+    rows = {"SC_144": {"completed": sc.completed,
+                       "turnaround_s": round(sc.avg_turnaround)}}
+    for size in sorted(res["DC"], reverse=True):
+        r = res["DC"][size]
+        rows[f"DC_{size}"] = {"completed": r.completed,
+                              "turnaround_s": round(r.avg_turnaround)}
+    return us, rows
+
+
+def fig8_killed_jobs(preempt="kill") -> Tuple[float, Dict]:
+    t0 = time.time()
+    res = _experiment(0, preempt)
+    us = (time.time() - t0) * 1e6
+    return us, {f"DC_{size}": res["DC"][size].killed
+                for size in sorted(res["DC"], reverse=True)}
+
+
+def consolidation_summary() -> Tuple[float, Dict]:
+    t0 = time.time()
+    res = _experiment(0, "kill")
+    claims = validate_claims(res)
+    us = (time.time() - t0) * 1e6
+    dc = res["DC"][160]
+    sc = res["SC"]
+    return us, {
+        "sc_nodes": SC_TOTAL, "dc_nodes": 160,
+        "cost_ratio": round(claims["cost_ratio_at_160"], 3),
+        "dc_completed": dc.completed, "sc_completed": sc.completed,
+        "dc_turnaround": round(dc.avg_turnaround),
+        "sc_turnaround": round(sc.avg_turnaround),
+        "all_claims_hold": all(v for k, v in claims.items()
+                               if isinstance(v, bool)),
+    }
+
+
+def beyond_paper_checkpoint_mode() -> Tuple[float, Dict]:
+    """Beyond-paper: checkpoint-preemption vs the paper's kill policy."""
+    t0 = time.time()
+    kill = _experiment(0, "kill")["DC"][160]
+    ck = _experiment(0, "checkpoint")["DC"][160]
+    us = (time.time() - t0) * 1e6
+    return us, {
+        "kill_completed": kill.completed, "ckpt_completed": ck.completed,
+        "kill_killed": kill.killed, "ckpt_preemptions": ck.preemptions,
+        "completed_gain": ck.completed - kill.completed,
+        "turnaround_kill": round(kill.avg_turnaround),
+        "turnaround_ckpt": round(ck.avg_turnaround),
+    }

@@ -1,0 +1,46 @@
+"""Re-run the HLO cost model over saved dry-run artifacts (no recompile).
+
+Updates each cell JSON's `hlo` / `collective_detail` / `roofline` fields in
+place from the stored .hlo.gz — used whenever the cost-model methodology
+changes (EXPERIMENTS.md records which model version scored each table).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def rescore(out_dir: str = "results/dryrun"):
+    sys.path.insert(0, "src")
+    from repro.configs import ARCHS, SHAPES_BY_NAME
+    from repro.hlo.analysis import analyze_file
+    from repro.hlo.roofline import score
+
+    n = 0
+    for mesh in ("single", "multi"):
+        for p in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+            r = json.load(open(p))
+            if r.get("status") != "ok":
+                continue
+            tag = ""
+            base = os.path.basename(p)[:-5]
+            hlo_path = os.path.join(out_dir, "hlo",
+                                    f"{mesh}__{base}.hlo.gz")
+            if not os.path.exists(hlo_path):
+                continue
+            totals = analyze_file(hlo_path)
+            r["hlo"] = {k: v for k, v in totals.items()
+                        if k != "collective_detail"}
+            r["collective_detail"] = totals["collective_detail"]
+            r["roofline"] = score(ARCHS[r["arch"]],
+                                  SHAPES_BY_NAME[r["shape"]],
+                                  r["devices"], r.get("plan", {}), totals)
+            json.dump(r, open(p, "w"), indent=1)
+            n += 1
+    print(f"rescored {n} cells")
+
+
+if __name__ == "__main__":
+    rescore(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

@@ -1,0 +1,122 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/<mesh>/<arch>__<shape>.json (written by
+repro.launch.dryrun), prints the three-term roofline table, identifies the
+dominant bottleneck per cell, and nominates the hillclimb candidates:
+worst roofline fraction / most collective-bound / most paper-representative.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+def load_cells(out_dir: str = "results/dryrun",
+               mesh: str = "single", view: str = "final") -> List[Dict]:
+    """Load cell records, re-scored with the current shared roofline model
+    (so methodology fixes apply to existing artifacts without recompiling).
+
+    view="baseline": untagged records only (the pre-hillclimb mapping).
+    view="final": per-cell best — the __opt record supersedes the baseline
+    when present (train cells after §Perf i4).
+    """
+    import re
+    from repro.configs import ARCHS, SHAPES_BY_NAME
+    from repro.hlo.roofline import score
+    by_cell: Dict[str, Dict] = {}
+    for p in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        m = re.match(r"(.+?__[a-z0-9_]+?)(__\w+)?$", base)
+        cell, tag = m.group(1), (m.group(2) or "")
+        if tag not in ("", "__opt"):
+            continue
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            continue
+        if view == "baseline" and tag:
+            continue
+        if tag == "__opt" or cell not in by_cell:
+            if view == "final" or not tag:
+                by_cell[cell] = r
+    cells = []
+    for r in by_cell.values():
+        r["roofline"] = score(ARCHS[r["arch"]], SHAPES_BY_NAME[r["shape"]],
+                              r["devices"], r.get("plan", {}), r["hlo"])
+        cells.append(r)
+    return cells
+
+
+def table(cells: List[Dict]) -> str:
+    hdr = (f"{'arch':<22} {'shape':<12} {'dom':<13} {'compute_s':>10} "
+           f"{'memory_s':>10} {'collect_s':>10} {'frac':>6} {'useful':>7} "
+           f"{'HBM_GB':>7} {'fits':>5}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(cells, key=lambda r: r["roofline"]["roofline_fraction"]):
+        rf = r["roofline"]
+        lines.append(
+            f"{r['arch']:<22} {r['shape']:<12} {rf['dominant']:<13} "
+            f"{rf['compute_s']:>10.4f} {rf['memory_s']:>10.4f} "
+            f"{rf['collective_s']:>10.4f} {rf['roofline_fraction']:>6.3f} "
+            f"{rf['useful_flops_ratio']:>7.3f} "
+            f"{r['memory']['peak_bytes_est']/1e9:>7.2f} "
+            f"{'y' if r.get('fits_hbm') else 'N':>5}")
+    return "\n".join(lines)
+
+
+def candidates(cells: List[Dict]) -> Dict[str, str]:
+    def key(r):
+        return f"{r['arch']}/{r['shape']}"
+    worst = min(cells, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(cells, key=lambda r: (r["roofline"]["collective_s"]
+                                     / max(max(r["roofline"]["compute_s"],
+                                               r["roofline"]["memory_s"]),
+                                           1e-12)))
+    # paper-representative: the consolidation story is train + decode sharing
+    # one pool; the train cell of the MoE arch stresses the most machinery
+    rep = next((r for r in cells if r["arch"] == "qwen3-moe-30b-a3b"
+                and r["shape"] == "train_4k"), cells[0])
+    return {"worst_fraction": key(worst), "most_collective_bound": key(coll),
+            "paper_representative": key(rep)}
+
+
+def roofline_report(mesh: str = "single",
+                    view: str = "final") -> Tuple[float, Dict]:
+    t0 = time.time()
+    cells = load_cells(mesh=mesh, view=view)
+    us = (time.time() - t0) * 1e6
+    if not cells:
+        return us, {"error": "no dry-run artifacts; run repro.launch.dryrun"}
+    fracs = [r["roofline"]["roofline_fraction"] for r in cells]
+    doms = {}
+    for r in cells:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    return us, {
+        "view": view,
+        "cells": len(cells),
+        "fits_hbm": sum(bool(r.get("fits_hbm")) for r in cells),
+        "median_fraction": sorted(fracs)[len(fracs) // 2],
+        "best_fraction": max(fracs),
+        "dominant_hist": doms,
+        "hillclimb": candidates(cells),
+    }
+
+
+def main():
+    for mesh in ("single", "multi"):
+        for view in ("baseline", "final"):
+            cells = load_cells(mesh=mesh, view=view)
+            if not cells:
+                continue
+            print(f"\n== roofline table ({mesh}-pod mesh, "
+                  f"{cells[0]['devices']} devices, {view} mapping) ==")
+            print(table(cells))
+        if mesh == "single" and cells:
+            print("\nhillclimb candidates:", candidates(cells))
+
+
+if __name__ == "__main__":
+    main()

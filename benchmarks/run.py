@@ -1,0 +1,64 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Sections:
+  paper figures  — fig5 / fig7 / fig8 / consolidation summary (§III)
+  beyond paper   — checkpoint-preemption vs kill ablation
+  kernels        — Pallas kernels vs oracles (CPU: oracle timing + max err)
+  roofline       — dry-run-derived roofline summary (needs results/dryrun)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt(derived) -> str:
+    return json.dumps(derived, separators=(",", ":"), default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_figs, roofline
+
+    benches = [
+        ("fig5_ws_consumption", paper_figs.fig5_ws_consumption),
+        ("fig7_completed_turnaround", paper_figs.fig7_completed_turnaround),
+        ("fig8_killed_jobs", paper_figs.fig8_killed_jobs),
+        ("consolidation_summary", paper_figs.consolidation_summary),
+        ("beyond_paper_checkpoint_mode",
+         paper_figs.beyond_paper_checkpoint_mode),
+        ("kernel_flash_attention", kernel_bench.bench_flash_attention),
+        ("kernel_decode_attention", kernel_bench.bench_decode_attention),
+        ("kernel_rglru_scan", kernel_bench.bench_rglru_scan),
+        ("kernel_mlstm_chunk", kernel_bench.bench_mlstm_chunk),
+        ("roofline_single_pod_baseline",
+         lambda: roofline.roofline_report("single", "baseline")),
+        ("roofline_single_pod_final",
+         lambda: roofline.roofline_report("single", "final")),
+        ("roofline_multi_pod_final",
+         lambda: roofline.roofline_report("multi", "final")),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.1f},{_fmt(derived)}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},NaN,{_fmt({'error': repr(e)})}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,51 @@
+"""Paper experiment end-to-end: SC vs DC consolidation (Fig. 5/7/8).
+
+    PYTHONPATH=src python examples/consolidation_sim.py
+    PYTHONPATH=src python examples/consolidation_sim.py --preempt checkpoint
+    PYTHONPATH=src python examples/consolidation_sim.py --scheduler easy_backfill
+"""
+import argparse
+import sys
+
+from repro.core.experiment import (DC_SIZES, SC_TOTAL, run_experiment,
+                                   validate_claims)
+from repro.core.types import SimConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--preempt", default="kill",
+                    choices=["kill", "checkpoint"])
+    ap.add_argument("--scheduler", default="first_fit",
+                    choices=["first_fit", "fcfs", "easy_backfill"])
+    ap.add_argument("--sizes", default=",".join(map(str, DC_SIZES)))
+    args = ap.parse_args(argv)
+
+    cfg = SimConfig(preempt_mode=args.preempt, scheduler=args.scheduler,
+                    seed=args.seed)
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    res = run_experiment(seed=args.seed, cfg=cfg, sizes=sizes)
+
+    sc = res["SC"]
+    print(f"\n== Static configuration (SC): {SC_TOTAL} nodes "
+          f"(144 HPC + 64 WS) ==")
+    print(f"  completed={sc.completed}/{sc.submitted}  "
+          f"avg_turnaround={sc.avg_turnaround:.0f}s  "
+          f"benefit_user={sc.benefit_user:.2e}")
+    print(f"\n== Dynamic configuration (DC), policy={args.preempt}/"
+          f"{args.scheduler} ==")
+    print(f"{'size':>6} {'cost%':>6} {'completed':>10} {'killed':>7} "
+          f"{'preempt':>8} {'turnaround':>11} {'ws_unmet':>9}")
+    for size in sorted(res['DC'], reverse=True):
+        r = res["DC"][size]
+        print(f"{size:>6} {100.0*size/SC_TOTAL:>5.1f}% {r.completed:>10} "
+              f"{r.killed:>7} {r.preemptions:>8} "
+              f"{r.avg_turnaround:>10.0f}s {r.ws_unmet_node_seconds:>9.0f}")
+    claims = validate_claims(res) if 160 in res["DC"] else {}
+    print("\npaper-claim validation:", claims)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,94 @@
+"""End-to-end training driver: a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_100m.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_100m.py --preset 10m  --steps 200
+
+Uses the full stack: config -> data pipeline -> train step (AdamW, remat,
+z-loss) -> async checkpointing -> metrics log. On this CPU container the
+`10m` preset finishes a 200-step run in minutes; `100m` is the same driver
+at deepseek-family dimensions d=768/L=12 (~124M params).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from repro.checkpoint.checkpointer import AsyncCheckpointer, latest_step, restore
+from repro.configs import ARCHS
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import SyntheticLM
+from repro.training.train_step import init_state, make_train_step
+
+PRESETS = {
+    "10m": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+                head_dim=64, d_ff=1024, vocab_size=8192),
+    "30m": dict(num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+                head_dim=64, d_ff=2048, vocab_size=16384),
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+                 head_dim=64, d_ff=3072, vocab_size=32768),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log", default="")
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS["deepseek-7b"].with_(param_dtype="float32",
+                                     compute_dtype="float32",
+                                     **PRESETS[args.preset])
+    tcfg = TrainConfig(learning_rate=args.lr, z_loss=1e-4, grad_clip=1.0)
+    data = SyntheticLM(cfg, seed=0)
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"preset={args.preset} params={n_params:,} "
+          f"tokens/step={args.batch * args.seq}")
+
+    ckpt = None
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        ckpt = AsyncCheckpointer(args.ckpt_dir)
+        if latest_step(args.ckpt_dir) is not None:
+            shapes = jax.eval_shape(lambda: state)
+            state = restore(args.ckpt_dir, shapes)
+            print("resumed from step", latest_step(args.ckpt_dir))
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    log = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = data.batch(step, args.batch, args.seq)
+        state, metrics = step_fn(state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            row = {"step": step, "loss": float(metrics["loss"]),
+                   "nll": float(metrics["nll"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "elapsed_s": round(time.time() - t0, 1)}
+            log.append(row)
+            print(f"step {step:4d} loss={row['loss']:.4f} "
+                  f"gnorm={row['grad_norm']:.3f} ({row['elapsed_s']}s)")
+        if ckpt and step and step % args.ckpt_every == 0:
+            ckpt.save(state, step=step)
+    if ckpt:
+        ckpt.save(state, step=args.steps)
+        ckpt.close()
+    if args.log:
+        json.dump(log, open(args.log, "w"), indent=1)
+    first, last = log[0]["nll"], log[-1]["nll"]
+    print(f"\nnll {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

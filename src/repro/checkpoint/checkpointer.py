@@ -1,0 +1,169 @@
+"""Sharding-aware checkpointing: save/restore arbitrary pytrees.
+
+Design (orbax-free, numpy-backed):
+  * leaves are gathered to host and written as .npy files keyed by their
+    tree path; a manifest.json records paths, shapes, dtypes and the step;
+  * writes go to a temp dir renamed atomically on completion — a crash
+    mid-save never corrupts the latest checkpoint (step-atomic manifests);
+  * ``AsyncCheckpointer`` stages device arrays to host synchronously (cheap)
+    and does file I/O on a worker thread — the train loop continues;
+  * restore takes a target pytree (shapes/dtypes/shardings) and lays leaves
+    out on the *current* mesh — this is what makes elastic resizing work:
+    save on a 16-device mesh, restore on 8, and every leaf is resharded to
+    the new topology by ``jax.device_put``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_key(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def _sanitize(key: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", key)
+
+
+def save(ckpt_dir: str, tree: Any, *, step: int = 0) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = _path_key(path)
+        arr = np.asarray(jax.device_get(leaf))
+        fname = _sanitize(key) + ".npy"
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype not in np.sctypeDict:
+            # ml_dtypes (bfloat16, fp8) are not np.save-able: store raw bytes
+            np.save(os.path.join(tmp, fname),
+                    arr.view(np.uint8).reshape(arr.shape + (arr.itemsize,)))
+        else:
+            np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "key": key, "file": fname, "shape": list(arr.shape),
+            "dtype": logical_dtype,
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _update_latest(ckpt_dir, step)
+    return final
+
+
+def _update_latest(ckpt_dir: str, step: int):
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    step = int(open(p).read().strip())
+    if os.path.isdir(os.path.join(ckpt_dir, f"step_{step:010d}")):
+        return step
+    return None
+
+
+def restore(ckpt_dir: str, target: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of `target` (pytree of arrays or
+    ShapeDtypeStructs). `shardings` (same structure) lays leaves onto the
+    current mesh — pass None to keep default placement."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "spec") or x is None)[0]
+    leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        key = _path_key(path)
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        meta = by_key[key]
+        arr = np.load(os.path.join(d, meta["file"]))
+        if arr.ndim == len(meta["shape"]) + 1:   # raw-bytes custom dtype
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])
+                                    if hasattr(ml_dtypes, meta["dtype"])
+                                    else meta["dtype"]))[..., 0]
+        want_dtype = leaf.dtype
+        if str(arr.dtype) != str(want_dtype):
+            arr = arr.astype(want_dtype)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
+        if shard_flat is not None and shard_flat[i] is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Thread-backed async save with a bounded queue (backpressure = 1)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree_host, step = item
+            try:
+                save(self.ckpt_dir, tree_host, step=step)
+            except BaseException as e:  # noqa: BLE001
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, tree: Any, *, step: int):
+        if self._err:
+            raise self._err
+        # stage to host synchronously (device buffers may be donated next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((host_tree, step))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._worker.join(timeout=10)

@@ -1,0 +1,130 @@
+"""Multi-tenant generalization of the paper's cooperative policies.
+
+The paper wires exactly two departments (one WS, one ST). Real organizations
+have many: this module generalizes the Resource Provision Service to N
+tenants with strict priorities, preserving the paper's three rules as the
+two-tenant special case:
+
+  * latency-class tenants (the WS CMSes) claim urgently in priority order;
+  * ALL idle resources flow to batch-class tenants (the ST CMSes), highest
+    priority first, each taking what it can use (open jobs) before the next;
+  * a claim that cannot be met from the free pool forcibly reclaims from
+    batch tenants in REVERSE priority order (cheapest victim first), then
+    from lower-priority latency tenants.
+
+`ConsolidationSim` keeps the paper's fixed 2-tenant wiring; the multi-tenant
+service is exercised by `tests/test_multitenant.py` and available to the
+runtime orchestrator for >2 departments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Tenant:
+    name: str
+    kind: str                  # "latency" | "batch"
+    priority: int              # lower number = higher priority
+    alloc: int = 0
+    # batch tenants: how many nodes they could still use (queue demand);
+    # latency tenants: their current target demand
+    demand: int = 0
+    # batch tenants: called to release n nodes (kill/preempt); returns freed
+    on_force_release: Optional[Callable[[int], int]] = None
+    # called when nodes are granted
+    on_grant: Optional[Callable[[int], None]] = None
+
+
+class MultiTenantProvisionService:
+    def __init__(self, total_nodes: int):
+        self.total = total_nodes
+        self.free = total_nodes
+        self.tenants: Dict[str, Tenant] = {}
+
+    # ------------------------------------------------------------- wiring
+    def register(self, tenant: Tenant):
+        assert tenant.name not in self.tenants
+        self.tenants[tenant.name] = tenant
+
+    def check(self):
+        used = sum(t.alloc for t in self.tenants.values())
+        assert used + self.free == self.total, (used, self.free, self.total)
+        assert self.free >= 0
+        assert all(t.alloc >= 0 for t in self.tenants.values())
+
+    def _batch_by_priority(self, reverse: bool = False) -> List[Tenant]:
+        ts = [t for t in self.tenants.values() if t.kind == "batch"]
+        return sorted(ts, key=lambda t: t.priority, reverse=reverse)
+
+    def _latency_by_priority(self, reverse: bool = False) -> List[Tenant]:
+        ts = [t for t in self.tenants.values() if t.kind == "latency"]
+        return sorted(ts, key=lambda t: t.priority, reverse=reverse)
+
+    # ------------------------------------------------------------ requests
+    def claim(self, name: str, n: int) -> int:
+        """A latency tenant urgently claims n more nodes (paper rule 1/3)."""
+        t = self.tenants[name]
+        assert t.kind == "latency"
+        granted = min(self.free, n)
+        self.free -= granted
+        t.alloc += granted
+        short = n - granted
+        # forced reclaim: batch tenants in reverse priority order first
+        victims = self._batch_by_priority(reverse=True) + [
+            lt for lt in self._latency_by_priority(reverse=True)
+            if lt.priority > t.priority and lt.name != name]
+        for v in victims:
+            if short <= 0:
+                break
+            take = min(short, v.alloc)
+            if take <= 0:
+                continue
+            got = take
+            if v.on_force_release is not None:
+                got = min(v.on_force_release(take), take)
+            v.alloc -= got
+            t.alloc += got
+            short -= got
+        self.check()
+        return n - short
+
+    def release(self, name: str, n: int):
+        """A tenant returns idle nodes; they flow to batch tenants."""
+        t = self.tenants[name]
+        n = min(n, t.alloc)
+        t.alloc -= n
+        self.free += n
+        self.check()
+        self.provision_idle()
+
+    def set_batch_demand(self, name: str, demand: int):
+        self.tenants[name].demand = max(0, demand)
+        self.provision_idle()
+
+    def provision_idle(self):
+        """Paper rule 2 generalized: idle flows to batch tenants by priority,
+        each capped at its declared demand; leftover goes to the highest-
+        priority batch tenant (greedy, like the paper's 'all idle to ST')."""
+        batch = self._batch_by_priority()
+        if not batch:
+            return
+        for t in batch:
+            if self.free <= 0:
+                break
+            want = max(0, t.demand - t.alloc)
+            give = min(want, self.free)
+            if give > 0:
+                self.free -= give
+                t.alloc += give
+                if t.on_grant is not None:
+                    t.on_grant(give)
+        if self.free > 0:
+            t = batch[0]
+            give = self.free
+            self.free = 0
+            t.alloc += give
+            if t.on_grant is not None:
+                t.on_grant(give)
+        self.check()

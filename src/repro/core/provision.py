@@ -1,0 +1,100 @@
+"""Resource Provision Service — the organization's proxy (paper §II-B).
+
+Policy (verbatim from the paper):
+  * WS demands have higher priority than ST demands.
+  * All idle resources are provisioned to ST.
+  * If WS claims urgent resources, the provision service FORCES ST to return
+    the claimed amount and reallocates it to WS.
+
+The service is a pure state machine over node *counts* (nodes are fungible);
+``runtime/device_pool.py`` maps counts to concrete device slices.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+
+class ResourceProvisionService:
+    def __init__(self, total_nodes: int):
+        self.total = total_nodes
+        self.free = total_nodes
+        self.st_alloc = 0
+        self.ws_alloc = 0
+        # wired by the simulator / runtime
+        self.on_grant_st: Optional[Callable[[int], None]] = None
+        self.on_grant_ws: Optional[Callable[[int], None]] = None
+        self.force_st_release: Optional[Callable[[int], int]] = None
+
+    # ----------------------------------------------------------- invariants
+    def check(self):
+        assert self.free >= 0 and self.st_alloc >= 0 and self.ws_alloc >= 0, \
+            (self.free, self.st_alloc, self.ws_alloc)
+        assert self.free + self.st_alloc + self.ws_alloc == self.total, \
+            (self.free, self.st_alloc, self.ws_alloc, self.total)
+
+    # ------------------------------------------------------------- WS side
+    def ws_request(self, n: int) -> int:
+        """WS claims n more nodes (urgent, highest priority).
+
+        Returns the number of nodes granted immediately from the free pool;
+        any shortfall is forcibly reclaimed from ST (the ST CMS kills /
+        preempts jobs synchronously via ``force_st_release``).
+        """
+        if n <= 0:
+            return 0
+        granted = min(self.free, n)
+        self.free -= granted
+        self.ws_alloc += granted
+        short = n - granted
+        if short > 0 and self.force_st_release is not None:
+            got = self.force_st_release(short)
+            got = min(got, short)
+            self.st_alloc -= got
+            self.ws_alloc += got
+            granted += got
+        self.check()
+        return granted
+
+    def ws_release(self, n: int):
+        """WS releases idle nodes immediately (paper's WS management policy)."""
+        n = min(n, self.ws_alloc)
+        self.ws_alloc -= n
+        self.free += n
+        self.check()
+        self.provision_idle_to_st()
+
+    # ------------------------------------------------------------- ST side
+    def provision_idle_to_st(self):
+        """All idle resources go to ST (paper's provision policy, rule 2)."""
+        if self.free > 0:
+            n = self.free
+            self.free = 0
+            self.st_alloc += n
+            self.check()
+            if self.on_grant_st is not None:
+                self.on_grant_st(n)
+
+    def st_release(self, n: int):
+        """ST voluntarily returns nodes (idle beyond need)."""
+        n = min(n, self.st_alloc)
+        self.st_alloc -= n
+        self.free += n
+        self.check()
+
+    # ------------------------------------------------- failures (runtime)
+    def node_failed(self, owner: str):
+        """A node died; capacity shrinks until repair."""
+        if owner == "free" and self.free > 0:
+            self.free -= 1
+        elif owner == "st" and self.st_alloc > 0:
+            self.st_alloc -= 1
+        elif owner == "ws" and self.ws_alloc > 0:
+            self.ws_alloc -= 1
+        self.total -= 1
+        self.check()
+
+    def node_repaired(self):
+        self.total += 1
+        self.free += 1
+        self.check()
+        self.provision_idle_to_st()

@@ -1,0 +1,206 @@
+"""Discrete-event consolidation simulator (paper §III-D).
+
+Wires ResourceProvisionService + ST CMS + WS CMS over a virtual-time event
+queue. Exact event ordering in virtual seconds — the paper's 100x wall-clock
+acceleration is irrelevant here (no wall-clock dependence at all).
+
+Supports the paper's experiment (kill-mode, first-fit, SC vs DC) plus the
+beyond-paper knobs in ``SimConfig``: checkpoint-preemption, EASY backfill,
+node failures/repairs, stragglers with speculative relaunch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.provision import ResourceProvisionService
+from repro.core.st_cms import STServer
+from repro.core.types import Event, EventKind, Job, JobState, SimConfig
+from repro.core.ws_cms import WSServer
+
+
+@dataclass
+class SimResult:
+    total_nodes: int
+    submitted: int
+    completed: int
+    killed: int
+    preemptions: int
+    avg_turnaround: float
+    median_turnaround: float
+    ws_unmet_node_seconds: float
+    ws_reclaim_events: int
+    st_node_seconds_used: float
+    st_avg_alloc: float
+    ws_avg_alloc: float
+    util_timeline: List[Tuple[float, int, int, int]] = field(repr=False,
+                                                             default_factory=list)
+
+    @property
+    def benefit_provider(self) -> int:
+        """Paper §III-A: ST provider benefit = completed jobs."""
+        return self.completed
+
+    @property
+    def benefit_user(self) -> float:
+        """Paper §III-A: end-user benefit = 1 / avg turnaround."""
+        return 1.0 / self.avg_turnaround if self.avg_turnaround > 0 else 0.0
+
+
+class ConsolidationSim:
+    def __init__(self, cfg: SimConfig, jobs: List[Job],
+                 ws_demand: List[Tuple[float, int]],
+                 horizon: float):
+        self.cfg = cfg
+        self.jobs = [dataclasses.replace(j) for j in jobs]
+        self.ws_demand = ws_demand
+        self.horizon = horizon
+        self.now = 0.0
+        self.rng = random.Random(cfg.seed)
+        self._q: List[Event] = []
+        self._seq = 0
+        self._job_epoch: Dict[int, int] = {}
+
+        self.rps = ResourceProvisionService(cfg.total_nodes)
+        self.st = STServer(cfg, self._schedule_finish, self._cancel_finish)
+        self.ws = WSServer(cfg, self._ws_request, self._ws_release)
+        self.rps.on_grant_st = lambda n: self.st.grant(n, self.now)
+        self.rps.force_st_release = \
+            lambda n: self.st.force_release(n, self.now)
+
+        # timeline accounting
+        self._last_t = 0.0
+        self._st_node_seconds = 0.0
+        self._st_alloc_seconds = 0.0
+        self._ws_alloc_seconds = 0.0
+        self.timeline: List[Tuple[float, int, int, int]] = []
+
+    # --------------------------------------------------------------- events
+    def _push(self, t: float, kind: EventKind, payload=None):
+        self._seq += 1
+        heapq.heappush(self._q, Event(t, self._seq, kind, payload))
+
+    def _schedule_finish(self, job: Job, t: float):
+        epoch = self._job_epoch.get(job.job_id, 0) + 1
+        self._job_epoch[job.job_id] = epoch
+        t_eff = t
+        if self.cfg.straggler_frac > 0 and \
+                self.rng.random() < self.cfg.straggler_frac:
+            slow = t + (self.cfg.straggler_slowdown - 1.0) * job.remaining()
+            if self.cfg.speculative_relaunch:
+                # detect at 1.2x nominal, relaunch a copy: finishes at
+                # detection + fresh remaining work
+                spec = self.now + 1.2 * job.remaining() + job.remaining()
+                t_eff = min(slow, spec)
+            else:
+                t_eff = slow
+        self._push(t_eff, EventKind.JOB_FINISH, (job, epoch))
+
+    def _cancel_finish(self, job: Job):
+        self._job_epoch[job.job_id] = self._job_epoch.get(job.job_id, 0) + 1
+
+    # ------------------------------------------------------------- WS wiring
+    def _ws_request(self, n: int) -> int:
+        return self.rps.ws_request(n)
+
+    def _ws_release(self, n: int):
+        self.rps.ws_release(n)
+
+    # ---------------------------------------------------------- accounting
+    def _account(self, t: float):
+        dt = t - self._last_t
+        if dt > 0:
+            self._st_node_seconds += self.st.used * dt
+            self._st_alloc_seconds += self.st.alloc * dt
+            self._ws_alloc_seconds += self.ws.alloc * dt
+            self._last_t = t
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> SimResult:
+        for job in self.jobs:
+            self._push(job.submit_time, EventKind.JOB_SUBMIT, job)
+        for t, n in self.ws_demand:
+            self._push(t, EventKind.WS_DEMAND, n)
+        if self.cfg.node_mtbf > 0:
+            self._push(self.rng.expovariate(
+                self.cfg.total_nodes / self.cfg.node_mtbf),
+                EventKind.NODE_FAIL)
+
+        # initial provision: everything idle goes to ST
+        self.rps.provision_idle_to_st()
+
+        while self._q:
+            ev = heapq.heappop(self._q)
+            if ev.time > self.horizon:
+                break
+            self._account(ev.time)
+            self.now = ev.time
+            if ev.kind is EventKind.JOB_SUBMIT:
+                self.st.submit(ev.payload, self.now)
+            elif ev.kind is EventKind.JOB_FINISH:
+                job, epoch = ev.payload
+                if self._job_epoch.get(job.job_id) == epoch and \
+                        job.state is JobState.RUNNING:
+                    self.st.job_finished(job, self.now)
+            elif ev.kind is EventKind.WS_DEMAND:
+                self.ws.set_demand(ev.payload, self.now)
+            elif ev.kind is EventKind.NODE_FAIL:
+                self._node_fail()
+                self._push(self.now + self.rng.expovariate(
+                    self.cfg.total_nodes / self.cfg.node_mtbf),
+                    EventKind.NODE_FAIL)
+            elif ev.kind is EventKind.NODE_REPAIR:
+                self.rps.node_repaired()
+            self.timeline.append((self.now, self.st.alloc, self.ws.alloc,
+                                  self.rps.free))
+        self._account(self.horizon)
+        return self._result()
+
+    def _node_fail(self):
+        total_alloc = self.rps.free + self.rps.st_alloc + self.rps.ws_alloc
+        if total_alloc <= 1:
+            return
+        r = self.rng.random() * total_alloc
+        if r < self.rps.free:
+            self.rps.node_failed("free")
+        elif r < self.rps.free + self.rps.st_alloc:
+            # a running ST job loses a node -> evict (kill or checkpoint)
+            if self.st.running:
+                victim = min(self.st.running.values(),
+                             key=lambda j: (j.size, self.now - j.start_time))
+                self.st._evict(victim, self.now)
+            self.st.alloc = max(0, self.st.alloc - 1)
+            self.rps.node_failed("st")
+            self.st.try_schedule(self.now)
+        else:
+            self.ws.node_lost(self.now)
+            self.rps.node_failed("ws")
+            # WS immediately re-requests to cover its demand
+            self.ws.set_demand(self.ws.demand, self.now)
+        self._push(self.now + self.cfg.node_repair_time, EventKind.NODE_REPAIR)
+
+    def _result(self) -> SimResult:
+        completed = [j for j in self.jobs if j.state is JobState.COMPLETED]
+        killed = [j for j in self.jobs if j.state is JobState.KILLED]
+        tats = sorted(j.turnaround for j in completed)
+        horizon = self.horizon
+        return SimResult(
+            total_nodes=self.cfg.total_nodes,
+            submitted=len(self.jobs),
+            completed=len(completed),
+            killed=len(killed),
+            preemptions=self.st.preemptions,
+            avg_turnaround=float(np.mean(tats)) if tats else 0.0,
+            median_turnaround=float(np.median(tats)) if tats else 0.0,
+            ws_unmet_node_seconds=self.ws.unmet_node_seconds,
+            ws_reclaim_events=self.ws.reclaim_events,
+            st_node_seconds_used=self._st_node_seconds,
+            st_avg_alloc=self._st_alloc_seconds / horizon,
+            ws_avg_alloc=self._ws_alloc_seconds / horizon,
+            util_timeline=self.timeline[-2000:],
+        )

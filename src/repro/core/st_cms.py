@@ -1,0 +1,130 @@
+"""ST CMS — cloud management service for scientific computing (paper §II).
+
+ST Server resource-management policy (verbatim):
+  * passively receives resources provisioned by the Resource Provision Service;
+  * on forced return, releases immediately with the demanded size;
+  * if idle nodes are insufficient, kills jobs in turn starting from the job
+    with MINIMUM SIZE and SHORTEST RUNNING TIME, until enough nodes are free.
+
+``preempt_mode="checkpoint"`` (beyond-paper) checkpoints instead of killing:
+the job is requeued with its completed work preserved (plus a checkpoint
+overhead), which materially improves the ST benefit curve (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.scheduler import SCHEDULERS
+from repro.core.types import Job, JobState, SimConfig
+
+
+class STServer:
+    def __init__(self, cfg: SimConfig,
+                 schedule_finish: Callable[[Job, float], None],
+                 cancel_finish: Callable[[Job], None]):
+        self.cfg = cfg
+        self.alloc = 0                 # nodes currently provisioned to ST
+        self.queue: List[Job] = []
+        self.running: Dict[int, Job] = {}
+        self._schedule_finish = schedule_finish
+        self._cancel_finish = cancel_finish
+        self.scheduler = SCHEDULERS[cfg.scheduler]
+        self.killed: List[Job] = []
+        self.preemptions = 0
+        self._finish_at: Dict[int, float] = {}
+
+    # ------------------------------------------------------------ capacity
+    @property
+    def used(self) -> int:
+        return sum(j.size for j in self.running.values())
+
+    @property
+    def idle(self) -> int:
+        return self.alloc - self.used
+
+    # ------------------------------------------------------------ events
+    def submit(self, job: Job, now: float):
+        self.queue.append(job)
+        self.try_schedule(now)
+
+    def grant(self, n: int, now: float):
+        """Resource Provision Service pushes n nodes (passive receipt)."""
+        self.alloc += n
+        self.try_schedule(now)
+
+    def job_finished(self, job: Job, now: float):
+        if job.job_id in self.running:
+            del self.running[job.job_id]
+            self._finish_at.pop(job.job_id, None)
+            job.state = JobState.COMPLETED
+            job.end_time = now
+            if job in self.queue:
+                self.queue.remove(job)
+            self.try_schedule(now)
+
+    # ------------------------------------------------------------ scheduling
+    def _running_release(self, now: float):
+        return sorted((self._finish_at[j.job_id], j.size)
+                      for j in self.running.values())
+
+    def try_schedule(self, now: float):
+        free = self.idle
+        if free <= 0 or not self.queue:
+            return
+        kw = {}
+        if self.cfg.scheduler == "easy_backfill":
+            kw["running_release"] = self._running_release(now)
+        started = self.scheduler(self.queue, free, now, **kw)
+        for job in started:
+            self.queue.remove(job)
+            job.state = JobState.RUNNING
+            job.start_time = now
+            self.running[job.job_id] = job
+            finish = now + job.remaining()
+            self._finish_at[job.job_id] = finish
+            self._schedule_finish(job, finish)
+
+    # ------------------------------------------------------------ reclaim
+    def force_release(self, n: int, now: float) -> int:
+        """Forced reclaim of n nodes (provision policy rule 3).
+
+        Frees idle nodes first, then kills/preempts jobs ordered by
+        (size asc, running-time asc) — the paper's kill order. Returns the
+        number of nodes actually released (== n unless alloc < n).
+        """
+        release = min(n, self.alloc)
+        freed = min(self.idle, release)
+        still_needed = release - freed
+        if still_needed > 0:
+            victims = sorted(self.running.values(),
+                             key=lambda j: (j.size, now - j.start_time))
+            got = 0
+            for v in victims:
+                if got >= still_needed:
+                    break
+                got += v.size
+                self._evict(v, now)
+            # eviction may free more than needed; the surplus stays idle in ST
+        self.alloc -= release
+        self.try_schedule(now)
+        return release
+
+    def _evict(self, job: Job, now: float):
+        self._cancel_finish(job)
+        del self.running[job.job_id]
+        self._finish_at.pop(job.job_id, None)
+        job.kills += 1
+        if self.cfg.preempt_mode == "checkpoint":
+            elapsed = now - job.start_time
+            job.checkpointed_work = min(
+                job.runtime,
+                job.checkpointed_work + max(0.0, elapsed
+                                            - self.cfg.checkpoint_cost))
+            job.state = JobState.QUEUED
+            job.start_time = None
+            self.preemptions += 1
+            self.queue.insert(0, job)       # resume first (it lost its slot)
+        else:
+            job.state = JobState.KILLED
+            job.end_time = now
+            self.killed.append(job)

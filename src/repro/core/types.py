@@ -1,0 +1,87 @@
+"""Core entity types of Phoenix Cloud (paper §II).
+
+The unit of provisioning is a *node*: in the 2009 paper a Xen VM / physical
+node, in the runtime bridge a TPU device slice (``runtime/device_pool.py``).
+All times are virtual seconds in the discrete-event simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class JobState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    COMPLETED = "completed"
+    KILLED = "killed"
+    PREEMPTED = "preempted"   # beyond-paper checkpoint-preempt mode
+
+
+@dataclass
+class Job:
+    """An HPC batch job (ST CMS workload)."""
+    job_id: int
+    submit_time: float
+    size: int                 # nodes requested
+    runtime: float            # required service seconds (on `size` nodes)
+    state: JobState = JobState.QUEUED
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    done_work: float = 0.0    # completed service seconds (checkpoint mode)
+    kills: int = 0
+    # set in checkpoint-preempt mode: work surviving the last preemption
+    checkpointed_work: float = 0.0
+
+    @property
+    def turnaround(self) -> Optional[float]:
+        if self.end_time is None or self.state is not JobState.COMPLETED:
+            return None
+        return self.end_time - self.submit_time
+
+    def remaining(self) -> float:
+        return max(0.0, self.runtime - self.checkpointed_work)
+
+
+class EventKind(enum.Enum):
+    JOB_SUBMIT = 1
+    JOB_FINISH = 2
+    WS_DEMAND = 3
+    REALLOC_DONE = 4
+    NODE_FAIL = 5
+    NODE_REPAIR = 6
+    HEARTBEAT = 7
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: EventKind = field(compare=False)
+    payload: object = field(compare=False, default=None)
+
+
+@dataclass
+class SimConfig:
+    """Knobs of the consolidation simulation (paper §III + beyond-paper)."""
+    total_nodes: int = 208
+    # seconds to repurpose a node ST->WS (paper: "only seconds" — software
+    # pre-deployed); charged before WS can use reclaimed nodes.
+    reallocation_latency: float = 5.0
+    # kill (paper) loses all work; checkpoint (beyond-paper) requeues the job
+    # with checkpointed progress, paying checkpoint_cost seconds.
+    preempt_mode: str = "kill"            # kill | checkpoint
+    checkpoint_cost: float = 30.0
+    scheduler: str = "first_fit"          # first_fit | fcfs | easy_backfill
+    # fault injection (large-scale runnability): mean time between node
+    # failures across the whole cluster; 0 disables.
+    node_mtbf: float = 0.0
+    node_repair_time: float = 3600.0
+    # straggler mitigation: fraction of job launches that straggle, slowdown
+    # factor, and whether speculative relaunch is enabled.
+    straggler_frac: float = 0.0
+    straggler_slowdown: float = 2.0
+    speculative_relaunch: bool = True
+    seed: int = 0

@@ -1,0 +1,418 @@
+"""HLO-text analyzer: FLOPs, HBM traffic, and collective bytes with
+while-loop trip-count multipliers.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis counts a while-loop
+body ONCE, so any scan-over-layers program (all of ours) under-reports by the
+layer count. This module parses ``compiled.as_text()`` and:
+
+  * counts dot/convolution FLOPs exactly from shapes + contracting dims,
+  * multiplies every computation reached through a ``while`` by its
+    ``known_trip_count`` (emitted by XLA for counted loops),
+  * recurses into fusions for FLOPs but treats a fusion as a single HBM
+    round-trip (operands + results) for the memory term — i.e. fusion
+    internals live in VMEM/registers, which is the TPU cost model,
+  * sums per-device wire bytes for each collective with ring-algorithm
+    factors (all-reduce 2x, all-gather/reduce-scatter ~1x of full payload).
+
+Used by launch/dryrun.py (inline) and benchmarks/roofline.py (offline on the
+saved .hlo.gz artifacts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f4e2m1fn": 1, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*\))?\s*(?:->[^{]*)?\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)=\{?%?([\w.\-]+)"
+    r"(?:,\s*%?([\w.\-]+))*\}?")
+_REPL_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPL_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    is_root: bool
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and ("{" in line):
+                cur = Computation(m.group(2), {}, [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        is_root, name, type_str, opcode, arg_str, attrs = m.groups()
+        operands = []
+        depth = 0
+        tok = ""
+        for ch in arg_str:
+            if ch == "(" or ch == "{" or ch == "[":
+                depth += 1
+            elif ch == ")" or ch == "}" or ch == "]":
+                depth -= 1
+            if ch == "," and depth == 0:
+                operands.append(tok.strip())
+                tok = ""
+            else:
+                tok += ch
+        if tok.strip():
+            operands.append(tok.strip())
+        operand_names = []
+        for o in operands:
+            o = o.strip()
+            # operands may be typed: "f32[2,3]{1,0} %name" — take the %-token
+            pm = re.findall(r"%([\w.\-]+)", o)
+            if pm:
+                operand_names.append(pm[-1])
+            else:
+                om = re.match(r"([\w.\-]+)", o)
+                if om:
+                    operand_names.append(om.group(1))
+        cur.ops[name] = Op(name, type_str, opcode, operand_names, attrs,
+                           bool(is_root))
+        cur.order.append(name)
+    return comps, entry
+
+
+def _called_comps(op: Op) -> List[str]:
+    out = []
+    for key in ("body", "condition", "to_apply", "calls"):
+        # braced list: key={%a, %b}; bare: key=%a (single name only)
+        for m in re.finditer(key + r"=\{([^}]*)\}", op.attrs):
+            for nm in m.group(1).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm:
+                    out.append(nm)
+        for m in re.finditer(key + r"=%?([\w.\-]+)", op.attrs):
+            out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+    if m:
+        for nm in m.group(1).split(","):
+            out.append(nm.strip().lstrip("%"))
+    # dedupe, preserve order
+    seen, uniq = set(), []
+    for nm in out:
+        if nm not in seen:
+            seen.add(nm)
+            uniq.append(nm)
+    return uniq
+
+
+def _dot_flops(op: Op, comp: Computation, params: Dict[str, str]) -> float:
+    lhs_t = _operand_type(op.operands[0], comp, params)
+    if lhs_t is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    sm = _SHAPE_RE.search(lhs_t)
+    dims = [int(x) for x in sm.group(2).split(",") if x] if sm and sm.group(2) \
+        else []
+    csize = 1
+    for c in cdims:
+        if c < len(dims):
+            csize *= dims[c]
+    return 2.0 * shape_elems(op.type_str) * csize
+
+
+def _operand_type(name: str, comp: Computation, params: Dict[str, str]):
+    if name in comp.ops:
+        return comp.ops[name].type_str
+    return params.get(name)
+
+
+_SKIP_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+                   "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+class HloCostModel:
+    """Computes flops / hbm bytes / collective wire-bytes with trip counts."""
+
+    def __init__(self, text: str, default_trip: int = 1):
+        self.comps, self.entry = parse_hlo(text)
+        self.default_trip = default_trip
+        self.unknown_trips: List[str] = []
+        self._memo: Dict[Tuple[str, bool], Tuple[float, float, float, dict]] = {}
+        self._param_reads_memo: Dict[str, Dict[int, float]] = {}
+
+    def _fusion_root_opcode(self, op: Op) -> str:
+        for c in _called_comps(op):
+            comp = self.comps.get(c)
+            if comp:
+                for nm in comp.order:
+                    if comp.ops[nm].is_root:
+                        return comp.ops[nm].opcode
+        return ""
+
+    def _fusion_param_reads(self, comp_name: str) -> Dict[int, float]:
+        """Per-parameter bytes actually READ by one fusion execution.
+
+        A fusion operand consumed only through dynamic-slice/gather/slice
+        reads window-sized bytes, not the whole buffer — the dominant case
+        for scan bodies slicing big loop-invariant arrays. Returns
+        {operand_index: bytes} for window-read params only.
+        """
+        if comp_name in self._param_reads_memo:
+            return self._param_reads_memo[comp_name]
+        out: Dict[int, float] = {}
+        comp = self.comps.get(comp_name)
+        if comp is not None:
+            params: Dict[str, int] = {}
+            for nm in comp.order:
+                op = comp.ops[nm]
+                if op.opcode == "parameter" and op.operands:
+                    try:
+                        params[nm] = int(op.operands[0])
+                    except ValueError:
+                        pass
+            for pname, idx in params.items():
+                consumers = [comp.ops[nm] for nm in comp.order
+                             if pname in comp.ops[nm].operands
+                             and comp.ops[nm].opcode != "parameter"]
+                if consumers and all(
+                        c.opcode in ("dynamic-slice", "gather", "slice")
+                        for c in consumers):
+                    out[idx] = float(sum(shape_bytes(c.type_str)
+                                         for c in consumers))
+        self._param_reads_memo[comp_name] = out
+        return out
+
+    def _op_hbm_bytes(self, op: Op, comp: Computation) -> float:
+        """HBM traffic of one top-level op.
+
+        Window ops only touch window-sized bytes of their big operand:
+          * dynamic-update-slice / scatter update IN PLACE (XLA aliases
+            loop-carried buffers) -> charge 2x the non-target operands;
+          * dynamic-slice / gather / slice READ only result-sized bytes of
+            the big operand -> charge result + small operands.
+        Charging full operands would over-count a KV-cache update (or a
+        scan reading one timestep) by the buffer size x trip count.
+        """
+        window_reads: Dict[int, float] = {}
+        if op.opcode == "fusion":
+            for c in _called_comps(op):
+                window_reads.update(self._fusion_param_reads(c))
+        opsz = []
+        for i, on in enumerate(op.operands):
+            t = _operand_type(on, comp, {})
+            if t:
+                full = shape_bytes(t)
+                opsz.append(min(window_reads.get(i, full), full))
+        res = shape_bytes(op.type_str)
+        root = op.opcode if op.opcode != "fusion" \
+            else self._fusion_root_opcode(op)
+        if root in ("dynamic-update-slice", "scatter") and opsz:
+            small = sum(opsz) - max(opsz)
+            return 2.0 * small
+        if root in ("dynamic-slice", "gather", "slice") and opsz:
+            small = sum(opsz) - max(opsz)
+            return 2.0 * res + small
+        if root == "convert" and opsz:
+            # dtype converts are an XLA:CPU artifact (bf16 dots get upcast
+            # to f32); TPU reads bf16 natively — charge the narrower side.
+            return 2.0 * min(res, max(opsz))
+        return res + sum(opsz)
+
+    def _ring_factor(self, opcode: str, attrs: str, type_str: str) -> float:
+        m = _REPL_GROUPS_RE.search(attrs)
+        if m:
+            n = int(m.group(2))  # [groups, group_size]<=[...]
+        else:
+            m2 = _REPL_GROUPS_LIST_RE.search(attrs)
+            n = len(m2.group(1).split(",")) if m2 else 2
+        n = max(n, 2)
+        frac = (n - 1) / n
+        b = shape_bytes(type_str)
+        if opcode == "all-reduce":
+            return 2.0 * frac * b
+        if opcode == "all-gather":
+            return frac * b                       # result is the full payload
+        if opcode == "reduce-scatter":
+            return frac * b * n                   # input is the full payload
+        if opcode == "all-to-all":
+            return frac * b
+        if opcode == "collective-permute":
+            return float(b)
+        return 0.0
+
+    def comp_cost(self, comp_name: str, inside_fusion: bool = False):
+        """Returns (flops, hbm_bytes, coll_bytes, detail).
+
+        detail carries collective byte breakdowns plus "_convert_bytes":
+        HBM traffic of dtype-convert-rooted ops, reported separately because
+        bf16<->f32 converts around dots are an XLA:CPU lowering artifact
+        that does not exist on the TPU target.
+        """
+        key = (comp_name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return (0.0, 0.0, 0.0, {})
+        flops = 0.0
+        hbm = 0.0
+        coll = 0.0
+        detail: Dict[str, float] = defaultdict(float)
+        for nm in comp.order:
+            op = comp.ops[nm]
+            oc = op.opcode
+            if oc == "dot":
+                flops += _dot_flops(op, comp, {})
+            elif oc == "convolution":
+                # rough upper bound: 2 * out_elems * kernel_elems (convs do
+                # not appear in our lowered programs; shifts are used instead)
+                rhs_t = _operand_type(op.operands[1], comp, {}) if \
+                    len(op.operands) > 1 else None
+                flops += 2.0 * shape_elems(op.type_str) * \
+                    max(shape_elems(rhs_t) if rhs_t else 1, 1)
+            if oc in COLLECTIVES or (oc + "-start") in COLLECTIVES or \
+                    oc.replace("-start", "") in COLLECTIVES:
+                base = oc.replace("-start", "")
+                if base in COLLECTIVES and not oc.endswith("-done"):
+                    w = self._ring_factor(base, op.attrs, op.type_str)
+                    coll += w
+                    detail[base] += w
+            if oc == "while":
+                m = _TRIP_RE.search(op.attrs)
+                trip = int(m.group(1)) if m else self.default_trip
+                if not m:
+                    self.unknown_trips.append(f"{comp_name}/{nm}")
+                called = _called_comps(op)
+                for c in called:
+                    f, h, cl, dt = self.comp_cost(c)
+                    flops += trip * f
+                    hbm += trip * h
+                    coll += trip * cl
+                    for k2, v in dt.items():
+                        detail[k2] += trip * v
+                continue
+            called = _called_comps(op)
+            if oc == "fusion":
+                for c in called:
+                    f, _h, cl, dt = self.comp_cost(c, inside_fusion=True)
+                    flops += f
+                    coll += cl
+                    for k2, v in dt.items():
+                        detail[k2] += v
+                # fusion = one HBM round trip: operands + result
+                if not inside_fusion:
+                    b = self._op_hbm_bytes(op, comp)
+                    hbm += b
+                    if self._fusion_root_opcode(op) == "convert":
+                        detail["_convert_bytes"] += b
+                continue
+            if oc in ("call", "conditional", "map", "reduce", "reduce-window",
+                      "scatter", "select-and-scatter", "sort",
+                      "custom-call") and called:
+                for c in called:
+                    f, h, cl, dt = self.comp_cost(c, inside_fusion)
+                    flops += f
+                    hbm += h
+                    coll += cl
+                    for k2, v in dt.items():
+                        detail[k2] += v
+            # HBM traffic for non-fused top-level ops
+            if not inside_fusion and oc not in _SKIP_BYTES_OPS \
+                    and oc != "fusion":
+                b = self._op_hbm_bytes(op, comp)
+                hbm += b
+                if oc == "convert":
+                    detail["_convert_bytes"] += b
+        out = (flops, hbm, coll, dict(detail))
+        self._memo[key] = out
+        return out
+
+    def totals(self) -> dict:
+        f, h, c, d = self.comp_cost(self.entry)
+        d = dict(d)
+        conv = d.pop("_convert_bytes", 0.0)
+        return {"flops": f, "hbm_bytes": h, "convert_bytes": conv,
+                "hbm_bytes_tpu": h - conv, "collective_bytes": c,
+                "collective_detail": d,
+                "unknown_trip_whiles": list(self.unknown_trips)}
+
+
+def analyze_text(text: str, default_trip: int = 1) -> dict:
+    return HloCostModel(text, default_trip).totals()
+
+
+def analyze_file(path: str, default_trip: int = 1) -> dict:
+    op = gzip.open if path.endswith(".gz") else open
+    with op(path, "rt") as f:
+        return analyze_text(f.read(), default_trip)

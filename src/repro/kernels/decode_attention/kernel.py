@@ -1,0 +1,102 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Grid: (batch*kv_heads, num_kv_blocks) — kv blocks iterate sequentially, the
+online-softmax state for the G = H/K grouped query heads persists in VMEM
+scratch. Slot validity comes from the cache's position array (ring buffers
+store -1 in empty slots); the sliding-window test uses the stored absolute
+positions, so ring wraparound needs no special casing.
+
+This is the decode_32k / long_500k hot spot: arithmetic intensity is O(1)
+FLOP/byte (every cache byte is read once per token), i.e. HBM-bandwidth
+-bound — the kernel's job is to stream the cache at full bandwidth with the
+softmax state pinned in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(cur_pos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, block_k: int, window: int):
+    ik = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # [G, hd]
+    k = k_ref[0].astype(jnp.float32)                     # [bk, hd]
+    v = v_ref[0]                                         # [bk, hd]
+    slot_pos = pos_ref[...]                              # [1, bk] i32
+    cur_pos = cur_pos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos)
+    if window > 0:
+        valid &= slot_pos > cur_pos - window
+    s = jnp.where(valid, s, NEG_INF)                     # [G, bk] via bcast
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, slot_pos, cur_pos, *, window: int = 0,
+                         block_k: int = 512, interpret: bool = False):
+    """q: [BK, G, hd]; k/v: [BK, S, hd]; slot_pos: [1, S] i32; cur_pos: [1] i32.
+
+    BK = batch * kv_heads; G = query heads per kv head. Returns [BK, G, hd].
+    """
+    BK, G, hd = q.shape
+    S = k.shape[1]
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    grid = (BK, S // block_k)
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # cur_pos
+            pl.BlockSpec((1, G, hd), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda b, ik: (0, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BK, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur_pos, q, k, v, slot_pos)

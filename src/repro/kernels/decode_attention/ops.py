@@ -1,0 +1,37 @@
+"""Jit'd wrapper for decode attention (model cache layout in)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.ref import decode_attention_reference
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "block_k"))
+def decode_attention(q, cache_k, cache_v, slot_pos, cur_pos, *,
+                     window: int = 0, impl: str = "auto",
+                     block_k: int = 512):
+    """q: [B, H, hd]; cache_k/v: [B, L, K, hd]; slot_pos: [L]; cur_pos scalar.
+
+    Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    L, K = cache_k.shape[1], cache_k.shape[2]
+    G = H // K
+    qk = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kk = cache_k.transpose(0, 2, 1, 3).reshape(B * K, L, hd)
+    vk = cache_v.transpose(0, 2, 1, 3).reshape(B * K, L, hd)
+    sp = slot_pos.reshape(1, L)
+    cp = jnp.asarray(cur_pos, jnp.int32).reshape(1)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        out = decode_attention_reference(qk, kk, vk, sp, cp, window=window)
+    else:
+        out = decode_attention_fwd(qk, kk, vk, sp, cp, window=window,
+                                   block_k=block_k,
+                                   interpret=(impl == "interpret"))
+    return out.reshape(B, K, G, hd).reshape(B, H, hd)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_reference(q, k, v, slot_pos, cur_pos, *,
+                               window: int = 0):
+    """q: [BK, G, hd]; k/v: [BK, S, hd]; slot_pos: [1, S]; cur_pos: [1]."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    sp = slot_pos[0]
+    valid = (sp >= 0) & (sp <= cur_pos[0])
+    if window > 0:
+        valid &= sp > cur_pos[0] - window
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bgs,bsd->bgd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

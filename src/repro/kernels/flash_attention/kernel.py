@@ -1,0 +1,120 @@
+"""Flash attention Pallas TPU kernel (forward).
+
+Grid: (batch*q_heads, num_q_blocks, num_kv_blocks) — the kv dimension is the
+innermost, sequentially-iterated grid axis on TPU, so the online-softmax
+running state (m, l, acc) lives in VMEM scratch and persists across kv steps.
+
+BlockSpecs stage [block_q, head_dim] query tiles and [block_k, head_dim]
+key/value tiles into VMEM; `head_dim` and the block sizes should be multiples
+of 128 to keep the MXU fully fed (lanes=128; sublanes=8 for f32/bf16 tiles).
+
+GQA is handled in the index maps: query head h reads kv head h // group_size.
+Causal and sliding-window masking are applied with 2D iotas; fully-masked
+tiles still occupy grid slots (documented roofline overhead ~2x on the
+attention term; the XLA path in models/attention.py skips above-diagonal
+tiles instead — see EXPERIMENTS.md §Perf for the comparison).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale: float, block_q: int, block_k: int,
+                      seq_len: int, causal: bool, window: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                       # [bk, hd]
+    v = v_ref[0]                                           # [bk, hd]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # [bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)             # [bq, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                 # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                        # [bq, 1]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 256, block_k: int = 256,
+                        interpret: bool = False):
+    """q: [BH, S, hd]; k/v: [BK, S, hd] with BH = BK * group. Returns [BH,S,hd].
+
+    The caller flattens batch x heads; group = BH // BK query heads share one
+    kv head (GQA).
+    """
+    BH, S, hd = q.shape
+    BK = k.shape[0]
+    group = BH // BK
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (BH, S // block_q, S // block_k)
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_len=S, causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),    # l (running denom)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""Jit'd public wrapper: model-layout in, kernel-layout dispatch.
+
+``flash_attention`` takes [B, S, H, hd] / [B, S, K, hd] (the model layout of
+repro.models.attention) and dispatches to the Pallas TPU kernel on TPU
+backends, interpret-mode Pallas when requested, or the jnp reference
+otherwise (CPU dry-run path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_reference
+
+
+def _to_kernel_layout(x):
+    # [B, S, H, hd] -> [B*H, S, hd]
+    B, S, H, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+
+def _from_kernel_layout(x, B, H):
+    BH, S, hd = x.shape
+    return x.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto", block_q: int = 256,
+                    block_k: int = 256):
+    """q: [B, S, H, hd]; k/v: [B, S, K, hd]. Returns [B, S, H, hd]."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    qk = _to_kernel_layout(q)
+    kk = _to_kernel_layout(k)
+    vk = _to_kernel_layout(v)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        out = flash_attention_reference(qk, kk, vk, causal=causal,
+                                        window=window)
+    else:
+        out = flash_attention_fwd(qk, kk, vk, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=(impl == "interpret"))
+    return _from_kernel_layout(out, B, H)

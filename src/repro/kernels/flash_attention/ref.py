@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_reference(q, k, v, *, causal: bool = True,
+                              window: int = 0):
+    """q: [BH, S, hd]; k/v: [BK, S, hd] (GQA group = BH // BK)."""
+    BH, S, hd = q.shape
+    BK = k.shape[0]
+    g = BH // BK
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.mlstm_chunk.ops import mlstm_chunk
+from repro.kernels.mlstm_chunk.ref import mlstm_chunk_reference

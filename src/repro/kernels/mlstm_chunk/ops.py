@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the chunkwise mLSTM kernel (model layout in)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_fwd
+from repro.kernels.mlstm_chunk.ref import mlstm_chunk_reference
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def mlstm_chunk(q, k, v, i_log, f_log, *, impl: str = "auto",
+                chunk: int = 128):
+    """q,k: [B,S,H,dqk]; v: [B,S,H,dv]; i_log/f_log: [B,S,H] -> [B,S,H,dv]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return mlstm_chunk_reference(q, k, v, i_log, f_log, chunk=chunk)
+    B, S, H, dqk = q.shape
+    dv = v.shape[-1]
+
+    def flat(x, d):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+
+    out = mlstm_chunk_fwd(flat(q, dqk), flat(k, dqk), flat(v, dv),
+                          i_log.transpose(0, 2, 1).reshape(B * H, S),
+                          f_log.transpose(0, 2, 1).reshape(B * H, S),
+                          chunk=chunk, interpret=(impl == "interpret"))
+    return out.reshape(B, H, S, dv).transpose(0, 2, 1, 3)

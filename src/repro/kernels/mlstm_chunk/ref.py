@@ -1,0 +1,9 @@
+"""Oracle: the model's chunkwise mLSTM (models/xlstm.mlstm_chunkwise)."""
+from __future__ import annotations
+
+from repro.models.xlstm import mlstm_chunkwise
+
+
+def mlstm_chunk_reference(q, k, v, i_log, f_log, *, chunk: int = 128):
+    """q,k: [B, S, H, dqk]; v: [B, S, H, dv]; gates [B, S, H]."""
+    return mlstm_chunkwise(q, k, v, i_log, f_log, chunk=chunk)

@@ -1,0 +1,65 @@
+"""Blocked linear-recurrence Pallas TPU kernel for the RG-LRU.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the rnn width. Grid:
+(batch, width_blocks, seq_blocks) with the sequence axis innermost and
+sequential; the carry h lives in VMEM scratch and flows across seq blocks.
+Within a block the recurrence is stepped with a fori_loop over the time
+rows of the VMEM tile — the channel dimension (lanes) stays fully vectorized.
+
+The XLA path (models/rglru.py) uses an associative scan, which is O(S log S)
+data movement; this kernel is the O(S) streaming version — the win is on the
+memory roofline term, which dominates recurrent layers at train/prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, carry_ref, *, block_s: int):
+    is_ = pl.program_id(2)
+
+    @pl.when(is_ == 0)
+    def _init():
+        carry_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    def step(t, h):
+        a_t = a_ref[0, t].astype(jnp.float32)            # [bw]
+        b_t = b_ref[0, t].astype(jnp.float32)
+        h = a_t * h + b_t
+        pl.store(o_ref, (0, pl.dslice(t, 1), slice(None)),
+                 h[None].astype(o_ref.dtype))
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, carry_ref[0])
+    carry_ref[...] = h[None]
+
+
+def rglru_scan_fwd(a, b, h0, *, block_s: int = 256, block_w: int = 512,
+                   interpret: bool = False):
+    """a, b: [B, S, W]; h0: [B, W]. Returns h: [B, S, W] (same dtype as b)."""
+    B, S, W = a.shape
+    block_s = min(block_s, S)
+    block_w = min(block_w, W)
+    assert S % block_s == 0 and W % block_w == 0, (S, W, block_s, block_w)
+    grid = (B, W // block_w, S // block_s)
+
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_w), lambda ib, iw, is_: (ib, is_, iw)),
+            pl.BlockSpec((1, block_s, block_w), lambda ib, iw, is_: (ib, is_, iw)),
+            pl.BlockSpec((1, block_w), lambda ib, iw, is_: (ib, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_w),
+                               lambda ib, iw, is_: (ib, is_, iw)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), b.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_fwd
+from repro.kernels.rglru_scan.ref import rglru_scan_reference
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_s", "block_w"))
+def rglru_scan(a, b, h0, *, impl: str = "auto", block_s: int = 256,
+               block_w: int = 512):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t. a,b: [B,S,W]; h0: [B,W]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return rglru_scan_reference(a, b, h0)
+    return rglru_scan_fwd(a, b, h0, block_s=block_s, block_w=block_w,
+                          interpret=(impl == "interpret"))

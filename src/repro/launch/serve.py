@@ -1,0 +1,76 @@
+"""Production serving launcher: WS-CMS pool + continuous batcher driven by a
+synthetic (or World-Cup-like) request trace, with the paper's autoscaler.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+        --requests 64 --devices 4
+"""
+import os
+import sys
+
+
+def _early_args(argv):
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            os.environ["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={argv[i + 1]}")
+
+
+_early_args(sys.argv)
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--capacity", type=float, default=400.0,
+                    help="tokens/interval one replica absorbs at 100%% util")
+    ap.add_argument("--devices", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCHS, reduced_config
+    from repro.models import model as M
+    from repro.runtime.serving_pool import ServingPool
+    from repro.serving.batching import ContinuousBatcher, Request
+
+    cfg = reduced_config(ARCHS[args.arch]) if args.reduced else ARCHS[args.arch]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pool = ServingPool(cfg, params, capacity_tokens_per_replica=args.capacity)
+    pool.scale_to(jax.devices()[:1])
+    batcher = ContinuousBatcher(max_batch=args.max_batch)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        batcher.submit(Request(
+            i, rng.integers(0, cfg.vocab_size, args.prompt_len,
+                            dtype=np.int32), args.max_new))
+    t0 = time.time()
+    rounds = 0
+    while batcher.queue:
+        reqs = batcher.next_round()
+        offered = float(sum(len(r.prompt) + r.max_new
+                            for r in list(batcher.queue) + reqs))
+        pool.scale_to(jax.devices()[:max(
+            1, min(pool.desired_replicas(offered), len(jax.devices())))])
+        batcher.run_round(reqs, pool.submit, now=time.time() - t0)
+        rounds += 1
+        print(f"round {rounds}: batch={len(reqs)} "
+              f"replicas={len(pool.replicas)} queued={len(batcher.queue)}",
+              flush=True)
+    dt = time.time() - t0
+    total_new = sum(r.max_new for r in batcher.completed)
+    print(f"served {len(batcher.completed)} requests / {total_new} tokens "
+          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

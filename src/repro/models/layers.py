@@ -1,0 +1,135 @@
+"""Basic building blocks: dense, norms, RoPE, embeddings, gated MLP.
+
+Pure-functional: parameters are nested dicts of jnp arrays; every block has an
+``init_*`` and an apply function. No framework dependency — this keeps full
+control over scan-stacking and sharding annotations.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------- dense
+
+
+def init_dense(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.bfloat16, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"kernel": (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+                    * scale).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- norms
+
+
+def init_norm(kind: str, dim: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((dim,), dtype)}  # gemma-style (1 + scale)
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_norm(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm, (1 + scale) parameterization
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)                  # [half]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- activations
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------- gated MLP
+
+
+def init_mlp(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": init_dense(k1, d, ff, dtype=dtype),
+        "wi_up": init_dense(k2, d, ff, dtype=dtype),
+        "wo": init_dense(k3, ff, d, dtype=dtype),
+    }
+
+
+def mlp(p, x, act_name: str):
+    act = activation(act_name)
+    h = act(dense(p["wi_gate"], x)) * dense(p["wi_up"], x)
+    return dense(p["wo"], h)
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def init_embedding(key, vocab: int, dim: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p, tokens, compute_dtype):
+    return jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(p, x):
+    """Logits against the embedding table (tied head)."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_r u_t + b_r)              (recurrence gate)
+    i_t = sigmoid(W_i u_t + b_i)              (input gate)
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+First-order linear recurrence with input-dependent decay => parallelizable
+via ``jax.lax.associative_scan`` for train/prefill; O(1)-state single step for
+decode. The block wraps the RG-LRU in Griffin's gated branch structure with a
+width-4 causal temporal conv.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, init_dense
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype):
+    w = cfg.lru_width
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate_in": init_dense(ks[0], d, w, dtype=dtype),      # GeLU branch
+        "w_rnn_in": init_dense(ks[1], d, w, dtype=dtype),       # recurrent branch
+        "rg_conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(dtype),
+        "rg_conv_b": jnp.zeros((w,), dtype),
+        "w_rg": init_dense(ks[3], w, w, bias=True, dtype=dtype),
+        "w_ig": init_dense(ks[4], w, w, bias=True, dtype=dtype),
+        # Lambda parameterized so a ~ U(0.9, 0.999) at init
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(
+                jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)) / _C)),
+            jnp.float32),
+        "w_out": init_dense(ks[6], w, d, dtype=dtype),
+    }
+
+
+def _causal_conv(u, w, b):
+    """u: [B, S, W]; width-K per-channel causal conv."""
+    K = w.shape[0]
+    out = u * w[K - 1].astype(u.dtype)
+    for j in range(1, K):
+        shifted = jnp.pad(u, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[K - 1 - j].astype(u.dtype)
+    return out + b.astype(u.dtype)
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(dense(p["w_rg"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_ig"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed in log space for stability
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, multiplier * i * u.astype(jnp.float32)
+
+
+def rglru_scan(p, u):
+    """u: [B, S, W] -> h: [B, S, W] via associative scan over S."""
+    a, bterm = _gates(p, u)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    return hh.astype(u.dtype)
+
+
+def rglru_step(p, u_t, h_prev):
+    """u_t: [B, W]; h_prev: [B, W] (f32) -> (h_t_cast, h_t_f32)."""
+    a, bterm = _gates(p, u_t)
+    h = a * h_prev + bterm
+    return h.astype(u_t.dtype), h
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16,
+                     abstract: bool = False):
+    w = cfg.lru_width
+    shapes = {
+        "h": ((batch, w), jnp.float32),
+        "conv": ((batch, cfg.conv_width - 1, w), dtype),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def rglru_block_forward(p, x, cfg: ModelConfig, act):
+    """Full-sequence Griffin recurrent block: [B,S,D] -> [B,S,D]."""
+    gate = act(dense(p["w_gate_in"], x))
+    u = dense(p["w_rnn_in"], x)
+    u = _causal_conv(u, p["rg_conv_w"], p["rg_conv_b"])
+    h = rglru_scan(p, u)
+    return dense(p["w_out"], gate * h)
+
+
+def rglru_block_prefill(p, x, cfg: ModelConfig, act):
+    gate = act(dense(p["w_gate_in"], x))
+    u0 = dense(p["w_rnn_in"], x)
+    u = _causal_conv(u0, p["rg_conv_w"], p["rg_conv_b"])
+    a, bterm = _gates(p, u)
+
+    def combine(xc, yc):
+        a1, b1 = xc
+        a2, b2 = yc
+        return a1 * a2, a2 * b1 + b2
+
+    _, hh = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    y = dense(p["w_out"], gate * hh.astype(x.dtype))
+    cw = cfg.conv_width
+    cache = {"h": hh[:, -1], "conv": u0[:, -(cw - 1):]}
+    return y, cache
+
+
+def rglru_block_decode(p, x, cache, cfg: ModelConfig, act):
+    """x: [B, 1, D] -> ([B, 1, D], cache)."""
+    xt = x[:, 0]
+    gate = act(dense(p["w_gate_in"], xt))
+    u_t = dense(p["w_rnn_in"], xt)
+    hist = jnp.concatenate([cache["conv"], u_t[:, None]], axis=1)  # [B, cw, W]
+    w = p["rg_conv_w"]
+    conv_out = jnp.einsum("bkw,kw->bw", hist.astype(jnp.float32),
+                          w.astype(jnp.float32)).astype(xt.dtype) \
+        + p["rg_conv_b"].astype(xt.dtype)
+    h_cast, h_f32 = rglru_step(p, conv_out, cache["h"])
+    y = dense(p["w_out"], gate * h_cast)
+    return y[:, None], {"h": h_f32, "conv": hist[:, 1:]}

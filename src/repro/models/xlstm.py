@@ -1,0 +1,328 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential — xLSTM paper §2.4 notes it is not
+parallelizable; on TPU we express it as a ``lax.scan`` over time).
+
+Stabilized exponential gating follows the xLSTM paper (arXiv:2405.04517):
+running max-state m keeps exp() arguments bounded; the stored state is the
+rescaled (C·e^{-m}, n·e^{-m}) pair so decode and chunkwise train agree.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, init_dense
+
+NEG_INF = -1e30
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    H = cfg.num_heads
+    dv = inner // H
+    dqk = dv // 2
+    return inner, H, dqk, dv
+
+
+# ====================================================================== mLSTM
+
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype):
+    inner, H, dqk, dv = _mlstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": init_dense(ks[0], d, inner, dtype=dtype),
+        "w_gate": init_dense(ks[1], d, inner, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, inner), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "w_q": init_dense(ks[3], inner, H * dqk, dtype=dtype),
+        "w_k": init_dense(ks[4], inner, H * dqk, dtype=dtype),
+        "w_v": init_dense(ks[5], inner, H * dv, dtype=dtype),
+        "w_i": init_dense(ks[6], inner, H, bias=True, dtype=jnp.float32),
+        "w_f": init_dense(ks[7], inner, H, bias=True, dtype=jnp.float32),
+        "out_scale": jnp.ones((H, dv), jnp.float32),
+        "w_down": init_dense(ks[8], inner, d, dtype=dtype),
+    }
+
+
+def _causal_conv(u, w, b):
+    K = w.shape[0]
+    out = u * w[K - 1].astype(u.dtype)
+    for j in range(1, K):
+        shifted = jnp.pad(u, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[K - 1 - j].astype(u.dtype)
+    return out + b.astype(u.dtype)
+
+
+def _headnorm(h, scale, eps=1e-6):
+    """Per-head RMS norm. h: [..., H, dv]."""
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    return (hf * jax.lax.rsqrt(var + eps) * scale).astype(h.dtype)
+
+
+def _mlstm_qkvif(p, x, cfg: ModelConfig):
+    inner, H, dqk, dv = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    xu = dense(p["w_up"], x)
+    g = dense(p["w_gate"], x)
+    xc = jax.nn.silu(_causal_conv(xu, p["conv_w"], p["conv_b"]))
+    q = dense(p["w_q"], xc).reshape(B, S, H, dqk)
+    k = dense(p["w_k"], xc).reshape(B, S, H, dqk) / math.sqrt(dqk)
+    v = dense(p["w_v"], xu).reshape(B, S, H, dv)
+    i_log = dense(p["w_i"], xc.astype(jnp.float32))               # [B,S,H]
+    f_log = jax.nn.log_sigmoid(dense(p["w_f"], xc.astype(jnp.float32)))
+    return xu, g, q, k, v, i_log, f_log
+
+
+def mlstm_chunkwise(q, k, v, i_log, f_log, *, chunk: int = 256,
+                    initial_state=None, return_state: bool = False):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k: [B,S,H,dqk]; v: [B,S,H,dv]; i_log,f_log: [B,S,H].
+    Returns h: [B,S,H,dv] (and final (C,n,m) state if requested).
+    """
+    B, S, H, dqk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    T = S // c
+
+    def resh(x, tail):
+        return x.reshape((B, T, c) + tail)
+
+    qs = resh(q, (H, dqk)).transpose(0, 1, 3, 2, 4)   # [B,T,H,c,dqk]
+    ks = resh(k, (H, dqk)).transpose(0, 1, 3, 2, 4)
+    vs = resh(v, (H, dv)).transpose(0, 1, 3, 2, 4)
+    il = resh(i_log, (H,)).transpose(0, 1, 3, 2)       # [B,T,H,c]
+    fl = resh(f_log, (H,)).transpose(0, 1, 3, 2)
+
+    if initial_state is None:
+        C0 = jnp.zeros((B, H, dqk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dqk), jnp.float32)
+        m0 = jnp.full((B, H), 0.0, jnp.float32)
+    else:
+        C0, n0, m0 = initial_state
+
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                                   # [B,H,dqk,dv] ...
+        qc, kc, vc, ic, fc = inp                          # [B,H,c,*]
+        b = jnp.cumsum(fc, axis=-1)                       # [B,H,c]
+        Btot = b[..., -1:]                                # [B,H,1]
+        # intra-chunk log weights: D[j,l] = b_j - b_l + i_l  (l <= j)
+        logD = b[..., :, None] - b[..., None, :] + ic[..., None, :]
+        logD = jnp.where(causal[None, None], logD, NEG_INF)
+        m_intra = jnp.max(logD, axis=-1)                  # [B,H,c]
+        m_inter = b + m[..., None]                        # [B,H,c]
+        m_j = jnp.maximum(m_intra, m_inter)
+        Dmat = jnp.exp(logD - m_j[..., None])
+        scores = jnp.einsum("bhjd,bhld->bhjl",
+                            qc.astype(jnp.float32), kc.astype(jnp.float32))
+        w_intra = scores * Dmat
+        h_intra = jnp.einsum("bhjl,bhld->bhjd", w_intra, vc.astype(jnp.float32))
+        n_intra = jnp.einsum("bhjl,bhld->bhjd", w_intra, kc.astype(jnp.float32))
+        dec_q = jnp.exp(m_inter - m_j)                    # [B,H,c]
+        h_inter = jnp.einsum("bhjd,bhde->bhje", qc.astype(jnp.float32), C) \
+            * dec_q[..., None]
+        n_inter = jnp.einsum("bhjd,bhd->bhj", qc.astype(jnp.float32), n) * dec_q
+        num = h_intra + h_inter                           # [B,H,c,dv]
+        den = jnp.abs(jnp.einsum("bhjd,bhjd->bhj", qc.astype(jnp.float32),
+                                 n_intra) + n_inter)
+        h = num / jnp.maximum(den, jnp.exp(-m_j))[..., None]
+        # ---- state update ----
+        m_state = jnp.maximum((Btot + m[..., None])[..., 0],
+                              jnp.max(Btot - b + ic, axis=-1))    # [B,H]
+        dec_k = jnp.exp(Btot - b + ic - m_state[..., None])        # [B,H,c]
+        C_new = C * jnp.exp(Btot[..., 0] + m - m_state)[..., None, None] \
+            + jnp.einsum("bhl,bhld,bhle->bhde", dec_k,
+                         kc.astype(jnp.float32), vc.astype(jnp.float32))
+        n_new = n * jnp.exp(Btot[..., 0] + m - m_state)[..., None] \
+            + jnp.einsum("bhl,bhld->bhd", dec_k, kc.astype(jnp.float32))
+        return (C_new, n_new, m_state), h
+
+    xs = (qs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+          vs.transpose(1, 0, 2, 3, 4), il.transpose(1, 0, 2, 3),
+          fl.transpose(1, 0, 2, 3))
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dv).astype(v.dtype)
+    if return_state:
+        return h, (Cf, nf, mf)
+    return h
+
+
+def mlstm_block_forward(p, x, cfg: ModelConfig, *, chunk: int = 256):
+    inner, H, dqk, dv = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    xu, g, q, k, v, i_log, f_log = _mlstm_qkvif(p, x, cfg)
+    h = mlstm_chunkwise(q, k, v, i_log, f_log, chunk=chunk)
+    h = _headnorm(h, p["out_scale"])
+    h = (h * jax.nn.silu(g).reshape(B, S, H, dv)).reshape(B, S, inner)
+    return dense(p["w_down"], h)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16,
+                     abstract: bool = False):
+    inner, H, dqk, dv = _mlstm_dims(cfg)
+    shapes = {
+        "C": ((batch, H, dqk, dv), jnp.float32),
+        "n": ((batch, H, dqk), jnp.float32),
+        "m": ((batch, H), jnp.float32),
+        "conv": ((batch, cfg.conv_width - 1, inner), dtype),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def mlstm_block_prefill(p, x, cfg: ModelConfig, *, chunk: int = 256):
+    inner, H, dqk, dv = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    xu, g, q, k, v, i_log, f_log = _mlstm_qkvif(p, x, cfg)
+    h, (C, n, m) = mlstm_chunkwise(q, k, v, i_log, f_log, chunk=chunk,
+                                   return_state=True)
+    h = _headnorm(h, p["out_scale"])
+    h = (h * jax.nn.silu(g).reshape(B, S, H, dv)).reshape(B, S, inner)
+    y = dense(p["w_down"], h)
+    cache = {"C": C, "n": n, "m": m, "conv": xu[:, -(cfg.conv_width - 1):]}
+    return y, cache
+
+
+def mlstm_block_decode(p, x, cache, cfg: ModelConfig):
+    """x: [B, 1, D] single-token decode."""
+    inner, H, dqk, dv = _mlstm_dims(cfg)
+    B = x.shape[0]
+    xt = x[:, 0]
+    xu = dense(p["w_up"], xt)                               # [B, inner]
+    g = dense(p["w_gate"], xt)
+    hist = jnp.concatenate([cache["conv"], xu[:, None]], axis=1)
+    w = p["conv_w"]
+    conv = jnp.einsum("bki,ki->bi", hist.astype(jnp.float32),
+                      w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(conv).astype(xt.dtype)
+    q = dense(p["w_q"], xc).reshape(B, H, dqk).astype(jnp.float32)
+    k = (dense(p["w_k"], xc).reshape(B, H, dqk)
+         / math.sqrt(dqk)).astype(jnp.float32)
+    v = dense(p["w_v"], xu).reshape(B, H, dv).astype(jnp.float32)
+    i_log = dense(p["w_i"], xc.astype(jnp.float32))          # [B,H]
+    f_log = jax.nn.log_sigmoid(dense(p["w_f"], xc.astype(jnp.float32)))
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(f_log + m, i_log)
+    fbar = jnp.exp(f_log + m - m_new)
+    ibar = jnp.exp(i_log - m_new)
+    C_new = C * fbar[..., None, None] + ibar[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = n * fbar[..., None] + ibar[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = _headnorm(h.astype(x.dtype), p["out_scale"])
+    h = (h * jax.nn.silu(g).reshape(B, H, dv)).reshape(B, inner)
+    y = dense(p["w_down"], h)
+    return y[:, None], {"C": C_new, "n": n_new, "m": m_new,
+                        "conv": hist[:, 1:]}
+
+
+# ====================================================================== sLSTM
+
+
+def init_slstm_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    inner = int(d * cfg.slstm_proj_factor)
+    ks = jax.random.split(key, 7)
+    gate_in = {}
+    for name, kk in zip(("z", "i", "f", "o"), jax.random.split(ks[0], 4)):
+        gate_in[f"w_{name}"] = init_dense(kk, d, d, bias=True, dtype=dtype)
+    rec = (jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32)
+           / math.sqrt(dh)).astype(jnp.float32)
+    return {
+        **gate_in,
+        "rec": rec,                                     # [4(z,i,f,o), H, dh, dh]
+        "out_scale": jnp.ones((H, dh), jnp.float32),
+        "w_ff_up": init_dense(ks[2], d, inner, dtype=dtype),
+        "w_ff_down": init_dense(ks[3], inner, d, dtype=dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, abstract: bool = False):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    sh = (batch, H, dh)
+    names = ("h", "c", "n", "m")
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh if k != "m" else (batch, H),
+                                        jnp.float32) for k in names}
+    return {k: jnp.zeros(sh if k != "m" else (batch, H), jnp.float32)
+            for k in names}
+
+
+def _slstm_cell(rec, xz, xi, xf, xo, state):
+    """One step. x*: [B,H,dh] (precomputed input projections, f32)."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    rz = jnp.einsum("bhd,hde->bhe", h, rec[0])
+    ri = jnp.einsum("bhd,hde->bhe", h, rec[1])
+    rf = jnp.einsum("bhd,hde->bhe", h, rec[2])
+    ro = jnp.einsum("bhd,hde->bhe", h, rec[3])
+    z = jnp.tanh(xz + rz)
+    i_log = (xi + ri).mean(axis=-1)                     # per-head scalar gates
+    f_log = jax.nn.log_sigmoid((xf + rf).mean(axis=-1))
+    o = jax.nn.sigmoid(xo + ro)
+    m_new = jnp.maximum(f_log + m, i_log)
+    ibar = jnp.exp(i_log - m_new)[..., None]
+    fbar = jnp.exp(f_log + m - m_new)[..., None]
+    c_new = fbar * c + ibar * z
+    n_new = fbar * n + ibar
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_block_forward(p, x, cfg: ModelConfig, act, *, initial_state=None,
+                        return_state: bool = False):
+    """[B,S,D] -> [B,S,D] via sequential scan over S."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    xz = dense(p["w_z"], x).astype(jnp.float32).reshape(B, S, H, dh)
+    xi = dense(p["w_i"], x).astype(jnp.float32).reshape(B, S, H, dh)
+    xf = dense(p["w_f"], x).astype(jnp.float32).reshape(B, S, H, dh)
+    xo = dense(p["w_o"], x).astype(jnp.float32).reshape(B, S, H, dh)
+    state = initial_state or init_slstm_cache(cfg, B)
+    rec = p["rec"]
+
+    def step(st, inp):
+        st = _slstm_cell(rec, *inp, st)
+        return st, st["h"]
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (xz, xi, xf, xo))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3)                         # [B,S,H,dh]
+    h = _headnorm(h, p["out_scale"]).reshape(B, S, D).astype(x.dtype)
+    y = dense(p["w_ff_down"], act(dense(p["w_ff_up"], h)))
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_block_decode(p, x, cache, cfg: ModelConfig, act):
+    B = x.shape[0]
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    xt = x[:, 0]
+    xz = dense(p["w_z"], xt).astype(jnp.float32).reshape(B, H, dh)
+    xi = dense(p["w_i"], xt).astype(jnp.float32).reshape(B, H, dh)
+    xf = dense(p["w_f"], xt).astype(jnp.float32).reshape(B, H, dh)
+    xo = dense(p["w_o"], xt).astype(jnp.float32).reshape(B, H, dh)
+    state = _slstm_cell(p["rec"], xz, xi, xf, xo, cache)
+    h = _headnorm(state["h"][:, None], p["out_scale"])
+    h = h.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    y = dense(p["w_ff_down"], act(dense(p["w_ff_up"], h)))
+    return y, state

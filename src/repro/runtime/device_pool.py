@@ -1,0 +1,58 @@
+"""Maps Phoenix node counts onto concrete JAX devices.
+
+The provision service reasons in fungible node counts; this pool assigns
+actual devices: the ST side receives rectangular groups (multiples of the
+training job's model-parallel width) so TP collectives stay intact; the WS
+side receives single devices per serving replica.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+
+
+class DevicePool:
+    def __init__(self, devices: Optional[Sequence] = None):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.free = list(self.devices)
+        self.st: List = []
+        self.ws: List = []
+
+    @property
+    def total(self) -> int:
+        return len(self.devices)
+
+    def check(self):
+        assert len(self.free) + len(self.st) + len(self.ws) == self.total
+
+    def grant_st(self, n: int) -> List:
+        n = min(n, len(self.free))
+        got, self.free = self.free[:n], self.free[n:]
+        self.st.extend(got)
+        self.check()
+        return got
+
+    def grant_ws(self, n: int) -> List:
+        n = min(n, len(self.free))
+        got, self.free = self.free[:n], self.free[n:]
+        self.ws.extend(got)
+        self.check()
+        return got
+
+    def reclaim_st(self, n: int) -> List:
+        """Take n devices back from ST (caller must resize the trainer)."""
+        n = min(n, len(self.st))
+        got = self.st[-n:]
+        self.st = self.st[:-n] if n else self.st
+        self.free.extend(got)
+        self.check()
+        return got
+
+    def release_ws(self, n: int) -> List:
+        n = min(n, len(self.ws))
+        got = self.ws[-n:]
+        self.ws = self.ws[:-n] if n else self.ws
+        self.free.extend(got)
+        self.check()
+        return got

@@ -1,0 +1,86 @@
+"""Runtime orchestrator: the paper's policies driving REAL JAX workloads.
+
+Glues ResourceProvisionService (counts) + DevicePool (devices) + an
+ElasticTrainer (ST job) + a ServingPool (WS replicas). The provisioning
+rules are the same objects the simulator uses — this is Phoenix Cloud's
+layered architecture with the cluster replaced by a JAX device pool:
+
+  WS load rises  -> autoscaler wants more replicas -> provision service
+  grants free devices or FORCES the trainer to shrink (checkpoint-resize);
+  WS load falls  -> replicas released -> all idle devices flow back to the
+  trainer, which grows at the next step boundary.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+from repro.core.provision import ResourceProvisionService
+from repro.runtime.device_pool import DevicePool
+from repro.runtime.elastic import ElasticTrainer
+from repro.runtime.serving_pool import ServingPool
+
+
+class PhoenixOrchestrator:
+    def __init__(self, trainer: ElasticTrainer, pool: ServingPool, *,
+                 devices=None, min_st_devices: int = 0):
+        self.devs = DevicePool(devices)
+        self.rps = ResourceProvisionService(self.devs.total)
+        self.trainer = trainer
+        self.pool = pool
+        self.min_st = max(min_st_devices, trainer.model_size)
+        self.rps.force_st_release = self._force_st_release
+        self.rps.on_grant_st = self._grant_st
+        self.events: List[Dict] = []
+        self._started = False
+
+    # ------------------------------------------------------------- wiring
+    def _grant_st(self, n: int):
+        self.devs.grant_st(n)
+        if self._started:
+            self._resize_trainer()
+        else:
+            self.trainer.start(self.devs.st)
+            self._started = True
+
+    def _force_st_release(self, n: int) -> int:
+        """Shrink the trainer by n devices, rounded UP to a whole DP group
+        (TP width is preserved) — surplus stays idle and is re-granted."""
+        tp = self.trainer.model_size
+        groups = math.ceil(n / tp)
+        max_groups = (len(self.devs.st) - self.min_st) // tp
+        groups = min(groups, max_groups)
+        take = groups * tp
+        if take <= 0:
+            return 0
+        self.devs.reclaim_st(take)
+        self._resize_trainer()
+        self.events.append({"kind": "st_shrink", "devices": take,
+                            "step": self.trainer.step})
+        return take
+
+    def _resize_trainer(self):
+        if self._started and self.devs.st:
+            self.trainer.resize(self.devs.st)
+
+    # ------------------------------------------------------------- control
+    def start(self):
+        self.rps.provision_idle_to_st()
+
+    def ws_tick(self, offered_load_tokens: float):
+        """One WS control interval: autoscale replicas to the offered load."""
+        want = self.pool.desired_replicas(offered_load_tokens)
+        have = len(self.pool.replicas)
+        if want > have:
+            got = self.rps.ws_request(want - have)
+            self.devs.grant_ws(got)
+        elif want < have:
+            give = have - want
+            self.devs.release_ws(give)
+            self.rps.ws_release(give)
+        self.pool.scale_to(self.devs.ws)
+        self.events.append({"kind": "ws_scale", "replicas":
+                            len(self.pool.replicas)})
+
+    def train_steps(self, n: int) -> Dict:
+        return self.trainer.train_steps(n)

@@ -1,0 +1,87 @@
+"""Serving replica pool: the runtime analogue of the paper's WS CMS.
+
+Each replica holds model params on one device and serves batched greedy
+decoding. The balancer routes requests to the replica with the fewest
+outstanding tokens (the paper's LVS least-connection policy); the §III-C
+80% utilization rule decides replica count against the pool's capacity.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+class Replica:
+    def __init__(self, cfg: ModelConfig, params_host, device):
+        self.cfg = cfg
+        self.device = device
+        self.params = jax.device_put(params_host, device)
+        self.outstanding = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            device=device)
+        self._prefill = jax.jit(
+            lambda p, t, ml: M.prefill(p, t, cfg, max_len=ml),
+            static_argnums=(2,), device=device)
+
+    def generate(self, prompt: np.ndarray, max_new: int) -> np.ndarray:
+        """prompt: [B, S] int32. Greedy decode max_new tokens."""
+        self.outstanding += prompt.size + max_new
+        try:
+            B, S = prompt.shape
+            logits, cache = self._prefill(self.params, jnp.asarray(prompt),
+                                          S + max_new)
+            toks = [jnp.argmax(logits, axis=-1)]
+            for i in range(max_new - 1):
+                nxt, cache = self._decode(self.params, cache,
+                                          toks[-1][:, None],
+                                          jnp.int32(S + i))
+                toks.append(jnp.argmax(nxt, axis=-1))
+            return np.stack([np.asarray(t) for t in toks], axis=1)
+        finally:
+            self.outstanding -= prompt.size + max_new
+
+
+class ServingPool:
+    """Least-outstanding routing + utilization-rule autoscaling."""
+
+    def __init__(self, cfg: ModelConfig, params_host, *,
+                 capacity_tokens_per_replica: float = 4096.0):
+        self.cfg = cfg
+        self.params_host = params_host
+        self.capacity = capacity_tokens_per_replica
+        self.replicas: List[Replica] = []
+        self.inflight_tokens = 0.0
+
+    # -------------------------------------------------------------- scaling
+    def scale_to(self, devices: Sequence):
+        """Reconcile replicas with the granted device set."""
+        want = {id(d): d for d in devices}
+        self.replicas = [r for r in self.replicas if id(r.device) in want]
+        have = {id(r.device) for r in self.replicas}
+        for d in devices:
+            if id(d) not in have:
+                self.replicas.append(Replica(self.cfg, self.params_host, d))
+
+    def desired_replicas(self, offered_load_tokens: float) -> int:
+        """Paper §III-C rule against token throughput capacity."""
+        n = max(1, len(self.replicas))
+        util = offered_load_tokens / (n * self.capacity)
+        if util > 0.80:
+            return n + 1
+        if n > 1 and util < 0.80 * (n - 1) / n:
+            return n - 1
+        return n
+
+    # -------------------------------------------------------------- serving
+    def submit(self, prompt: np.ndarray, max_new: int) -> np.ndarray:
+        assert self.replicas, "no replicas provisioned"
+        replica = min(self.replicas, key=lambda r: r.outstanding)
+        return replica.generate(prompt, max_new)

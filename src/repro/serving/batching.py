@@ -1,0 +1,68 @@
+"""Continuous-batching request queue for the serving engine.
+
+Requests arrive asynchronously; the scheduler packs compatible requests
+(same max_new budget bucket) into batch slots, prefills them together and
+interleaves decode steps, retiring sequences as they hit their budget. This
+is the WS CMS's unit of work — the pool's replicas each run one of these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray          # [S] int32
+    max_new: int
+    arrival: float = 0.0
+    done: Optional[np.ndarray] = None
+    finish_time: float = 0.0
+
+
+class ContinuousBatcher:
+    """Greedy slot-packing batcher (static shapes per generation round)."""
+
+    def __init__(self, *, max_batch: int = 8, bucket: int = 64):
+        self.max_batch = max_batch
+        self.bucket = bucket
+        self.queue: Deque[Request] = deque()
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def next_round(self) -> Optional[List[Request]]:
+        """Pick up to max_batch requests with compatible shapes."""
+        if not self.queue:
+            return None
+        head = self.queue[0]
+        key = (len(head.prompt) // self.bucket, head.max_new // self.bucket)
+        round_reqs = []
+        rest: Deque[Request] = deque()
+        while self.queue and len(round_reqs) < self.max_batch:
+            r = self.queue.popleft()
+            if (len(r.prompt) // self.bucket,
+                    r.max_new // self.bucket) == key:
+                round_reqs.append(r)
+            else:
+                rest.append(r)
+        self.queue.extendleft(reversed(rest))
+        return round_reqs
+
+    def run_round(self, reqs: List[Request], generate_fn, now: float = 0.0):
+        """generate_fn(prompts [B, S], max_new) -> [B, max_new]."""
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.stack([np.pad(r.prompt, (S - len(r.prompt), 0))
+                            for r in reqs])
+        max_new = max(r.max_new for r in reqs)
+        out = generate_fn(prompts.astype(np.int32), max_new)
+        for i, r in enumerate(reqs):
+            r.done = out[i, :r.max_new]
+            r.finish_time = now
+            self.completed.append(r)

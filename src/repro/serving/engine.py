@@ -1,0 +1,51 @@
+"""Serving steps: prefill and single-token decode against a KV/state cache.
+
+These are the functions lowered by the dry-run's ``prefill_*`` / ``decode_*``
+/ ``long_*`` cells, and driven by the continuous-batching layer in
+``repro.serving.batching`` / ``repro.runtime.serving_pool``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def make_prefill_fn(cfg: ModelConfig, *, constrain=M._ident,
+                    moe_groups: int = 1, max_len: int = 0) -> Callable:
+    def prefill_fn(params, batch_in):
+        logits, cache = M.prefill(params, batch_in, cfg, constrain=constrain,
+                                  moe_groups=moe_groups, max_len=max_len)
+        # greedy next token (sampling lives in the batching layer)
+        if cfg.num_codebooks:
+            next_tok = jnp.argmax(logits, axis=-1)         # [B, C]
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)         # [B]
+        return next_tok, cache
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig, *, constrain=M._ident,
+                   moe_groups: int = 1) -> Callable:
+    def decode_fn(params, cache, tokens, cur_pos):
+        logits, cache = M.decode_step(params, cache, tokens, cur_pos, cfg,
+                                      constrain=constrain,
+                                      moe_groups=moe_groups)
+        next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok, cache
+    return decode_fn
+
+
+def decode_inputs(cfg: ModelConfig, batch: int, *, abstract: bool = False):
+    """Token (or stub-embedding) inputs for one decode step."""
+    if cfg.input_mode == "embeddings":
+        sh, dt = (batch, 1, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+    else:
+        sh, dt = (batch, 1), jnp.int32
+    if abstract:
+        return jax.ShapeDtypeStruct(sh, dt)
+    return jnp.zeros(sh, dt)

@@ -1,0 +1,40 @@
+"""Token samplers for the serving engine: greedy, temperature, top-k,
+nucleus (top-p) — pure functions over logits, jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0
+    top_k: int = 0          # 0 = disabled
+    top_p: float = 1.0      # 1.0 = disabled
+    greedy: bool = False
+
+
+def sample(logits: jnp.ndarray, key, cfg: SamplerConfig) -> jnp.ndarray:
+    """logits: [..., V] -> token ids [...]."""
+    if cfg.greedy:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits.astype(jnp.float32)
+    if cfg.temperature != 1.0:
+        logits = logits / jnp.maximum(cfg.temperature, 1e-6)
+    if cfg.top_k and cfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -cfg.top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if cfg.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative mass >= top_p
+        keep = cum - probs < cfg.top_p
+        cutoff = jnp.max(jnp.where(keep, sorted_logits, -jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1)

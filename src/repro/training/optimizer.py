@@ -1,0 +1,79 @@
+"""AdamW with f32 master weights, ZeRO-1-shardable state, optional int8
+gradient quantize-dequantize (models a compressed DP all-reduce; see
+DESIGN.md §7 for the SPMD caveat).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # i32 scalar
+    m: Any                     # f32 tree
+    v: Any                     # f32 tree
+    master: Any                # f32 tree (master copy of params)
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    # explicit copy: if params are already f32, astype would alias the same
+    # buffer and break donation (same buffer donated twice in train_step)
+    master = jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), params)
+    return OptState(jnp.zeros((), jnp.int32), f32(params), f32(params), master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def quantize_int8(g):
+    """Per-tensor symmetric int8 quantize-dequantize."""
+    def one(x):
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return q.astype(jnp.float32) * scale
+    return jax.tree.map(one, g)
+
+
+def adamw_update(opt: OptState, grads, params, tcfg: TrainConfig):
+    """Returns (new_params, new_opt, metrics)."""
+    if tcfg.grad_compression == "int8":
+        grads = quantize_int8(grads)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if tcfg.grad_clip > 0 else 1.0
+    step = opt.step + 1
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tcfg.eps) + tcfg.weight_decay * w
+        w2 = w - tcfg.learning_rate * delta
+        return m2, v2, w2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    flat_w = treedef.flatten_up_to(opt.master)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype),
+                              new_master, params)
+    return new_params, OptState(step, new_m, new_v, new_master), \
+        {"grad_norm": gnorm}

@@ -1,0 +1,96 @@
+"""Train step: loss, grads (optionally microbatched), AdamW update.
+
+The returned step function is pure and pjit-able; all distribution comes from
+in/out shardings plus the ``constrain`` hook threaded into the model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import model as M
+from repro.training.optimizer import OptState, adamw_update, init_opt_state
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 0.001
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_state(key, cfg: ModelConfig) -> TrainState:
+    params = M.init_params(key, cfg)
+    return TrainState(params, init_opt_state(params))
+
+
+def _input_of(batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    return batch["embeds"] if cfg.input_mode == "embeddings" else batch["tokens"]
+
+
+def cross_entropy(logits, labels, z_loss_coef: float):
+    """logits [..., V] f32; labels [...] int. Mean NLL + z-loss."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - gold)
+    zl = jnp.mean(jnp.square(lse))
+    return nll + z_loss_coef * zl, nll
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, *, constrain=M._ident,
+                 moe_groups: int = 1) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = M.forward(params, _input_of(batch, cfg), cfg,
+                                constrain=constrain, remat=tcfg.remat,
+                                moe_groups=moe_groups)
+        loss, nll = cross_entropy(logits, batch["labels"], tcfg.z_loss)
+        if cfg.moe is not None:
+            loss = loss + MOE_LB_COEF * aux.get("moe_lb", 0.0) \
+                + MOE_Z_COEF * aux.get("moe_z", 0.0)
+        return loss, {"nll": nll}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, constrain=M._ident,
+                    moe_groups: int = 1) -> Callable:
+    loss_fn = make_loss_fn(cfg, tcfg, constrain=constrain,
+                           moe_groups=moe_groups)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        k = tcfg.microbatch
+        if k and k > 1:
+            def resh(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            mb = jax.tree.map(resh, batch)
+
+            def body(carry, mbatch):
+                acc, loss_acc, nll_acc = carry
+                (loss, aux), g = grad_fn(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss, nll_acc + aux["nll"]), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss, nll), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0), jnp.float32(0)), mb)
+            inv = 1.0 / k
+            return loss * inv, {"nll": nll * inv}, \
+                jax.tree.map(lambda g: g * inv, gsum)
+        (loss, aux), g = grad_fn(params, batch)
+        return loss, aux, g
+
+    def train_step(state: TrainState, batch):
+        loss, aux, grads = compute_grads(state.params, batch)
+        new_params, new_opt, om = adamw_update(state.opt, grads, state.params,
+                                               tcfg)
+        metrics = {"loss": loss, "nll": aux["nll"], **om}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

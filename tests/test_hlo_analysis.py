@@ -1,0 +1,113 @@
+"""HLO cost-model unit tests (synthetic HLO text + a real lowered program)."""
+import textwrap
+
+import pytest
+
+from repro.hlo.analysis import (HloCostModel, analyze_text, parse_hlo,
+                                shape_bytes)
+
+
+SIMPLE = textwrap.dedent("""
+    HloModule test
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[2,4]<=[8], to_apply=%add_c
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,16])) -> pred[] {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    %add_c (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (x: f32[8,16]) -> (s32[], f32[8,16]) {
+      %x = f32[8,16]{1,0} parameter(0)
+      %z = s32[] constant(0)
+      %tup = (s32[], f32[8,16]) tuple(%z, %x)
+      ROOT %w = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+    }
+""")
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert shape_bytes("bf16[4,4]") == 32
+    assert shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+    assert shape_bytes("pred[]") == 1
+
+
+def test_while_trip_count_multiplies_flops_and_collectives():
+    t = analyze_text(SIMPLE)
+    # dot: 2*8*16*16 = 4096 flops x 5 trips
+    assert t["flops"] == pytest.approx(5 * 2 * 8 * 16 * 16)
+    # all-reduce wire bytes: 2 * (4-1)/4 * 512 bytes x 5
+    assert t["collective_bytes"] == pytest.approx(5 * 2 * 0.75 * 512)
+    assert t["unknown_trip_whiles"] == []
+
+
+def test_unknown_trip_recorded():
+    txt = SIMPLE.replace(', backend_config={"known_trip_count":{"n":"5"}}', "")
+    t = analyze_text(txt)
+    assert len(t["unknown_trip_whiles"]) == 1
+    assert t["flops"] == pytest.approx(2 * 8 * 16 * 16)  # counted once
+
+
+def test_typed_operands_parse():
+    comps, entry = parse_hlo(SIMPLE)
+    assert entry == "main"
+    assert "body" in comps
+    assert comps["body"].ops["dot.1"].operands == ["x", "w"]
+
+
+def test_real_lowered_program_flops():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x, w1, w2):
+        return jnp.sum(jnp.tanh(x @ w1) @ w2)
+
+    shapes = (jax.ShapeDtypeStruct((32, 64), jnp.float32),
+              jax.ShapeDtypeStruct((64, 128), jnp.float32),
+              jax.ShapeDtypeStruct((128, 16), jnp.float32))
+    compiled = jax.jit(f).lower(*shapes).compile()
+    t = analyze_text(compiled.as_text())
+    want = 2 * 32 * 64 * 128 + 2 * 32 * 128 * 16
+    assert t["flops"] == pytest.approx(want, rel=0.01)
+
+
+def test_scan_vs_unroll_parity():
+    """The whole reason this module exists: scan == unroll FLOPs."""
+    import jax
+    import jax.numpy as jnp
+
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f_scan(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    def f_unroll(x, ws):
+        for i in range(6):
+            x, _ = body(x, ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((6, 32, 32), jnp.float32)
+    fs = analyze_text(jax.jit(f_scan).lower(x, ws).compile().as_text())
+    fu = analyze_text(jax.jit(f_unroll).lower(x, ws).compile().as_text())
+    assert fs["flops"] == pytest.approx(fu["flops"], rel=0.01)

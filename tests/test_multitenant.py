@@ -1,0 +1,107 @@
+"""Multi-tenant provision service: N departments, strict priorities."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import MultiTenantProvisionService, Tenant
+
+
+def make_service(total=100):
+    svc = MultiTenantProvisionService(total)
+    freed = {"st1": 0, "st2": 0}
+
+    def releaser(name):
+        def f(n):
+            freed[name] += n
+            return n
+        return f
+
+    svc.register(Tenant("ws1", "latency", priority=0))
+    svc.register(Tenant("ws2", "latency", priority=1))
+    svc.register(Tenant("st1", "batch", priority=2,
+                        on_force_release=releaser("st1")))
+    svc.register(Tenant("st2", "batch", priority=3,
+                        on_force_release=releaser("st2")))
+    return svc, freed
+
+
+def test_idle_flows_to_highest_priority_batch():
+    svc, _ = make_service()
+    svc.tenants["st1"].demand = 30
+    svc.tenants["st2"].demand = 50
+    svc.provision_idle()
+    # st1 gets its demand, st2 gets its demand, leftover -> st1 (greedy)
+    assert svc.tenants["st1"].alloc == 30 + 20
+    assert svc.tenants["st2"].alloc == 50
+    assert svc.free == 0
+
+
+def test_two_tenant_special_case_matches_paper():
+    """With one WS + one ST this reduces to the paper's three rules."""
+    svc = MultiTenantProvisionService(10)
+    svc.register(Tenant("ws", "latency", priority=0))
+    svc.register(Tenant("st", "batch", priority=1,
+                        on_force_release=lambda n: n))
+    svc.provision_idle()
+    assert svc.tenants["st"].alloc == 10          # rule 2: all idle to ST
+    got = svc.claim("ws", 4)                      # rule 3: forced reclaim
+    assert got == 4
+    assert svc.tenants["ws"].alloc == 4 and svc.tenants["st"].alloc == 6
+    svc.release("ws", 2)                          # WS releases immediately
+    assert svc.tenants["st"].alloc == 8           # ... and idle goes to ST
+
+
+def test_reclaim_order_reverse_priority():
+    svc, freed = make_service()
+    svc.tenants["st1"].demand = 60
+    svc.tenants["st2"].demand = 40
+    svc.provision_idle()
+    # claim more than st2 (lowest priority) holds: st2 drained before st1
+    got = svc.claim("ws1", 50)
+    assert got == 50
+    assert freed["st2"] == 40
+    assert freed["st1"] == 10
+    assert svc.tenants["st2"].alloc == 0
+
+
+def test_latency_tenants_preempt_lower_priority_latency():
+    svc, _ = make_service()
+    svc.claim("ws2", 100)          # ws2 grabs everything
+    got = svc.claim("ws1", 30)     # higher-priority ws1 preempts ws2
+    assert got == 30
+    assert svc.tenants["ws1"].alloc == 30
+    assert svc.tenants["ws2"].alloc == 70
+
+
+def test_lower_priority_latency_cannot_preempt_higher():
+    svc, _ = make_service()
+    svc.claim("ws1", 100)
+    got = svc.claim("ws2", 10)     # nothing reclaimable below ws2
+    assert got == 0
+    assert svc.tenants["ws1"].alloc == 100
+
+
+@given(total=st.integers(10, 200),
+       ops=st.lists(st.tuples(st.sampled_from(["claim1", "claim2", "rel1",
+                                               "rel2", "demand1", "demand2"]),
+                              st.integers(0, 80)), max_size=40))
+@settings(max_examples=80, deadline=None)
+def test_conservation_under_arbitrary_ops(total, ops):
+    svc, _ = make_service(total)
+    for op, n in ops:
+        if op == "claim1":
+            svc.claim("ws1", n)
+        elif op == "claim2":
+            svc.claim("ws2", n)
+        elif op == "rel1":
+            svc.release("ws1", n)
+        elif op == "rel2":
+            svc.release("ws2", n)
+        elif op == "demand1":
+            svc.set_batch_demand("st1", n)
+        else:
+            svc.set_batch_demand("st2", n)
+        svc.check()
+        # latency priority invariant: ws1 never starved while ws2 holds
+        # (after any claim, ws1's last claim was fully satisfiable unless
+        # everything above it was exhausted) — structural check:
+        assert svc.free >= 0

@@ -1,0 +1,122 @@
+"""Partitioning-rule unit tests (spec shapes only — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import model as M
+from repro.sharding import partitioning as pt
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # abstract mesh over fake device objects: only .shape is consulted by
+    # the spec builders, but Mesh wants real devices — use the CPU device
+    # replicated via a 1x1 mesh and exercise the spec logic through a
+    # mock-shaped mesh object instead.
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    return FakeMesh()
+
+
+def specs_for(arch, mesh, **kw):
+    cfg = ARCHS[arch]
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    return cfg, shapes, pt.param_specs(shapes, cfg, mesh, **kw)
+
+
+def leaves_with_paths(tree):
+    return {"/".join(str(getattr(k, "key", k)) for k in path): v
+            for path, v in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def test_dense_tp_rules(mesh):
+    cfg, shapes, specs = specs_for("deepseek-7b", mesh)
+    sp = leaves_with_paths(specs)
+    shp = leaves_with_paths(shapes)
+    # column-parallel: wq kernel last dim on model
+    assert sp["repeats/b0/mixer/wq/kernel"][-1] == "model"
+    # row-parallel: wo kernel penultimate dim on model
+    assert sp["repeats/b0/mixer/wo/kernel"][-2] == "model"
+    # embedding vocab-sharded
+    assert sp["embed/table"][0] == "model"
+    # norms replicated
+    assert all(s is None for s in sp["repeats/b0/pre_norm/scale"])
+    # leading repeat dim never sharded
+    for k, s in sp.items():
+        if k.startswith("repeats/"):
+            assert s[0] is None, k
+
+
+def test_fsdp_adds_data_dim(mesh):
+    _, shapes, specs = specs_for("mistral-large-123b", mesh, fsdp=True)
+    sp = leaves_with_paths(specs)
+    assert "data" in tuple(sp["repeats/b0/mixer/wq/kernel"])
+    assert "data" in tuple(sp["repeats/b0/mlp/wi_gate/kernel"])
+
+
+def test_tp1_pure_fsdp_layout(mesh):
+    _, shapes, specs = specs_for("qwen2-7b", mesh, fsdp=True, tp=1)
+    sp = leaves_with_paths(specs)
+    flat = [a for s in sp.values() for a in s if a is not None]
+    # no model-only sharding: every sharded dim uses the combined axes
+    assert all(isinstance(a, tuple) and set(a) == {"data", "model"}
+               for a in flat)
+
+
+def test_moe_expert_tp_vs_ep(mesh):
+    _, _, specs = specs_for("qwen3-moe-30b-a3b", mesh, fsdp=True)
+    sp = leaves_with_paths(specs)
+    wi = sp["repeats/b0/moe/wi_gate"]          # [R, E, D, F]
+    assert wi[-1] == "model"                   # expert-TP on ffn dim
+    # EP variant shards the expert dim on data
+    import dataclasses
+    cfg = ARCHS["qwen3-moe-30b-a3b"]
+    cfg_ep = cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                               expert_parallel=True))
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg_ep),
+                            jax.random.PRNGKey(0))
+    sp_ep = leaves_with_paths(pt.param_specs(shapes, cfg_ep, mesh))
+    assert sp_ep["repeats/b0/moe/wi_gate"][1] == "data"
+
+
+def test_zero1_shards_optimizer_over_data(mesh):
+    cfg, shapes, specs = specs_for("deepseek-7b", mesh)
+    z = pt.zero1_specs(specs, shapes, mesh)
+    sp = leaves_with_paths(z)
+    # norm scales [R, D]: D=4096 divisible by 16 -> data-sharded in opt state
+    assert "data" in tuple(sp["repeats/b0/pre_norm/scale"])
+    # already-TP'd dims keep model; a free dim gains data
+    wq = tuple(sp["repeats/b0/mixer/wq/kernel"])
+    assert "model" in wq and "data" in wq
+
+
+def test_data_spec_fallback_chain():
+    class FakeMultiMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    m = FakeMultiMesh()
+    # 256 % 512 != 0 -> falls to (data, model) = 256
+    s = pt.data_spec(m, (256, 128), tp=1)
+    assert s[0] == ("data", "model")
+    # 512 shards over all three
+    s2 = pt.data_spec(m, (512, 128), tp=1)
+    assert s2[0] == ("pod", "data", "model")
+    # indivisible batch -> data only
+    s3 = pt.data_spec(m, (48, 128), tp=1)
+    assert s3[0] == "data"
+
+
+def test_cache_specs_shard_heads_or_length(mesh):
+    cfg = ARCHS["deepseek-7b"]           # kv=32 divisible by 16
+    cache = M.init_cache(cfg, 128, 32768, abstract=True)
+    cs = pt.cache_specs(cache, cfg, mesh)
+    sp = leaves_with_paths(cs)
+    k = sp["repeats/b0/k"]               # [R, B, L, K, hd]
+    assert k[3] == "model" and k[1] is not None
+    cfg2 = ARCHS["qwen2-7b"]             # kv=4: falls to length sharding
+    cache2 = M.init_cache(cfg2, 128, 32768, abstract=True)
+    sp2 = leaves_with_paths(pt.cache_specs(cache2, cfg2, mesh))
+    assert sp2["repeats/b0/k"][2] == "model"

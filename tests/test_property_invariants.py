@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the Phoenix Cloud invariants.
+
+System invariants under arbitrary job sets and WS demand curves:
+  * node conservation: free + st_alloc + ws_alloc == total, always;
+  * WS priority: unmet demand only when demand exceeds total capacity;
+  * ST never runs more nodes than allocated;
+  * completed jobs have turnaround >= runtime;
+  * every job ends in exactly one terminal/queue state.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import ConsolidationSim
+from repro.core.types import Job, JobState, SimConfig
+
+HOUR = 3600.0
+HORIZON = 48 * HOUR
+
+
+@st.composite
+def job_sets(draw):
+    n = draw(st.integers(1, 40))
+    jobs = []
+    for i in range(n):
+        jobs.append(Job(
+            job_id=i + 1,
+            submit_time=draw(st.floats(0, HORIZON * 0.8)),
+            size=draw(st.integers(1, 64)),
+            runtime=draw(st.floats(60.0, 12 * HOUR)),
+        ))
+    return jobs
+
+
+@st.composite
+def demand_curves(draw):
+    n = draw(st.integers(0, 25))
+    times = sorted(draw(st.lists(st.floats(0, HORIZON), min_size=n,
+                                 max_size=n)))
+    return [(t, draw(st.integers(0, 80))) for t in times]
+
+
+class AuditedSim(ConsolidationSim):
+    """Checks conservation + allocation invariants after every event."""
+
+    def run(self):
+        # monkeypatch accounting hook to audit at every event boundary
+        orig_account = self._account
+
+        def audited(t):
+            orig_account(t)
+            self.rps.check()
+            assert self.st.used <= self.st.alloc, \
+                (self.st.used, self.st.alloc)
+            assert self.st.alloc == self.rps.st_alloc
+            assert self.ws.alloc == self.rps.ws_alloc
+
+        self._account = audited
+        return super().run()
+
+
+@given(jobs=job_sets(), demand=demand_curves(),
+       total=st.integers(80, 256),
+       mode=st.sampled_from(["kill", "checkpoint"]))
+@settings(max_examples=60, deadline=None)
+def test_invariants_hold(jobs, demand, total, mode):
+    cfg = SimConfig(total_nodes=total, preempt_mode=mode)
+    sim = AuditedSim(cfg, jobs, demand, horizon=HORIZON)
+    res = sim.run()
+
+    # WS priority: unmet only when demand > total
+    max_demand = max((n for _, n in demand), default=0)
+    if max_demand <= total:
+        assert res.ws_unmet_node_seconds == 0.0
+
+    for j in sim.jobs:
+        if j.state is JobState.COMPLETED:
+            assert j.turnaround >= j.remaining() - 1e-6
+            assert j.end_time >= j.submit_time
+        if mode == "checkpoint":
+            assert j.state is not JobState.KILLED
+
+    n_terminal = sum(j.state in (JobState.COMPLETED, JobState.KILLED,
+                                 JobState.QUEUED, JobState.RUNNING)
+                     for j in sim.jobs)
+    assert n_terminal == len(sim.jobs)
+    assert res.completed + res.killed <= res.submitted
+
+
+@given(total=st.integers(16, 300), req=st.lists(st.integers(1, 64),
+                                                min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_provision_service_conservation(total, req):
+    from repro.core.provision import ResourceProvisionService
+    rps = ResourceProvisionService(total)
+    rps.force_st_release = lambda n: min(n, rps.st_alloc)
+    rps.provision_idle_to_st()
+    ws_alloc = 0
+    for r in req:
+        if ws_alloc > 0 and r % 3 == 0:
+            give = min(ws_alloc, r)
+            rps.ws_release(give)
+            ws_alloc -= give
+        else:
+            got = rps.ws_request(r)
+            assert got <= r
+            ws_alloc += got
+        rps.check()
+        assert rps.ws_alloc == ws_alloc

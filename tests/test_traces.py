@@ -1,0 +1,61 @@
+"""Trace generator calibration tests (paper §III-B targets)."""
+import numpy as np
+import pytest
+
+from repro.core.traces import (SDSC_BLUE_JOBS_2W, SDSC_BLUE_NODES,
+                               TWO_WEEKS_S, WORLDCUP_PEAK_INSTANCES,
+                               WS_CAPACITY_RPS, parse_swf,
+                               synthetic_sdsc_blue, synthetic_worldcup_load,
+                               worldcup_demand_events)
+from repro.core.ws_cms import demand_from_load
+
+
+def test_sdsc_job_count_and_bounds():
+    jobs = synthetic_sdsc_blue(seed=0)
+    assert len(jobs) == SDSC_BLUE_JOBS_2W == 2672
+    assert all(1 <= j.size <= SDSC_BLUE_NODES for j in jobs)
+    assert all(0 <= j.submit_time <= TWO_WEEKS_S for j in jobs)
+    assert all(j.runtime > 0 for j in jobs)
+
+
+def test_sdsc_demand_saturates_dedicated_system():
+    jobs = synthetic_sdsc_blue(seed=0)
+    node_s = sum(j.size * j.runtime for j in jobs)
+    u = node_s / (SDSC_BLUE_NODES * TWO_WEEKS_S)
+    assert 0.9 < u < 1.1   # saturation regime of the real machine
+
+
+def test_worldcup_peak_is_64_instances():
+    load, dt = synthetic_worldcup_load(seed=0)
+    demand = demand_from_load(load, dt, WS_CAPACITY_RPS)
+    assert demand.max() == WORLDCUP_PEAK_INSTANCES
+
+
+def test_worldcup_peak_to_normal_ratio_high():
+    load, _ = synthetic_worldcup_load(seed=0)
+    ratio = load.max() / np.median(load)
+    assert ratio > 5.0   # paper: "ratio of peak loads to normal loads is high"
+
+
+def test_demand_events_compression_roundtrip():
+    ev = worldcup_demand_events(seed=0)
+    assert ev[0][0] == 0.0
+    levels = [n for _, n in ev]
+    assert max(levels) == WORLDCUP_PEAK_INSTANCES
+    # consecutive events always change the level
+    assert all(levels[i] != levels[i - 1] for i in range(1, len(levels)))
+
+
+def test_swf_parser(tmp_path):
+    p = tmp_path / "trace.swf"
+    p.write_text("""; SWF test
+; comment
+1 100 0 3600 16 -1 -1 16 -1 -1 1 1 1 1 -1 -1 -1 -1
+2 200 5 1800 8 -1 -1 8 -1 -1 1 1 1 1 -1 -1 -1 -1
+3 300 5 -1 8 -1 -1 8 -1 -1 1 1 1 1 -1 -1 -1 -1
+""")
+    jobs = parse_swf(str(p))
+    assert len(jobs) == 2            # negative-runtime row dropped
+    assert jobs[0].size == 2         # 16 cpus / 8 per node
+    assert jobs[0].runtime == 3600.0
+    assert jobs[1].submit_time == 200.0
