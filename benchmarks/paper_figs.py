@@ -4,6 +4,10 @@ fig5  — WS resource consumption under the World-Cup-like trace (§III-C)
 fig7  — completed jobs + avg turnaround vs cluster size, SC vs DC (§III-D)
 fig8  — killed jobs vs cluster size (§III-D)
 summary — the 76.9%-cost consolidation claim + validation booleans
+request_level_slo — beyond-paper: p99 latency + SLO violations under the
+    request-level WS workload (repro.workloads), DC vs dedicated WS nodes
+campaign_tiny — the tiny scenario campaign grid; also the source of the
+    BENCH_campaign.json artifact written by benchmarks/run.py
 """
 from __future__ import annotations
 
@@ -83,6 +87,64 @@ def consolidation_summary() -> Tuple[float, Dict]:
         "sc_turnaround": round(sc.avg_turnaround),
         "all_claims_hold": all(v for k, v in claims.items()
                                if isinstance(v, bool)),
+    }
+
+
+def request_level_slo() -> Tuple[float, Dict]:
+    """Beyond-paper: request-level WS latency, consolidated vs dedicated.
+
+    One 2-hour scenario: flash-crowd arrivals + SLO autoscaler feeding the
+    consolidation sim (64 shared nodes) vs the same trace pinned to a
+    16-node dedicated WS partition.
+    """
+    from repro.core.simulator import ConsolidationSim
+    from repro.core.traces import synthetic_sdsc_blue
+    from repro.core.types import SLOConfig
+    from repro.serving.batching import ServiceTimeModel
+    from repro.workloads import RequestWorkload, make_trace
+
+    t0 = time.time()
+    horizon = 7200.0
+    trace = make_trace("flash_crowd", 2.0, horizon, seed=0)
+    workload = RequestWorkload(trace=trace, model=ServiceTimeModel(),
+                               slo=SLOConfig(latency_target_s=30.0))
+    jobs = synthetic_sdsc_blue(seed=0, n_jobs=80, horizon=horizon,
+                               max_nodes=32)
+    res = ConsolidationSim(SimConfig(total_nodes=64), jobs, workload,
+                           horizon=horizon).run()
+    dedicated = workload.realized_metrics([(0.0, 16)], horizon=horizon)
+    us = (time.time() - t0) * 1e6
+    dc = res.ws_latency or {}
+    return us, {
+        "requests": len(trace),
+        "dc_p99_s": round(dc.get("p99_s", 0.0), 2),
+        "dc_violation_rate": round(dc.get("violation_rate", 0.0), 5),
+        "dc_slo_met": bool(dc.get("slo_met", False)),
+        "dedicated16_p99_s": round(dedicated["p99_s"], 2),
+        "dedicated16_violation_rate":
+            round(dedicated["violation_rate"], 5),
+        "st_completed_alongside": res.completed,
+    }
+
+
+def campaign_tiny(out_path: str = "BENCH_campaign.json"
+                  ) -> Tuple[float, Dict]:
+    """Tiny scenario campaign (8 cells); writes the JSON artifact."""
+    from repro.workloads.campaign import make_grid, run_campaign
+
+    t0 = time.time()
+    art = run_campaign(make_grid("tiny"), workers=2, out_path=out_path,
+                       grid_name="tiny")
+    us = (time.time() - t0) * 1e6
+    ov = art["reductions"]["overall"]
+    return us, {
+        "n_cells": art["n_cells"],
+        "wall_s": round(art["wall_s"], 2),
+        "slo_met_rate": ov["slo_met_rate"],
+        "mean_ws_p99_s": round(ov["ws_p99_s"], 2),
+        "mean_violation_rate": round(ov["ws_violation_rate"], 5),
+        "mean_completed": ov["completed"],
+        "artifact": out_path,
     }
 
 

@@ -34,6 +34,8 @@ def main() -> None:
         ("consolidation_summary", paper_figs.consolidation_summary),
         ("beyond_paper_checkpoint_mode",
          paper_figs.beyond_paper_checkpoint_mode),
+        ("request_level_slo", paper_figs.request_level_slo),
+        ("campaign_tiny", paper_figs.campaign_tiny),
         ("kernel_flash_attention", kernel_bench.bench_flash_attention),
         ("kernel_decode_attention", kernel_bench.bench_decode_attention),
         ("kernel_rglru_scan", kernel_bench.bench_rglru_scan),

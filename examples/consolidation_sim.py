@@ -1,15 +1,28 @@
 """Paper experiment end-to-end: SC vs DC consolidation (Fig. 5/7/8).
 
+Default runs the request-level WS workload (``repro.workloads``): requests
+arrive via a flash-crowd process, an SLO autoscaler turns latency targets
+into node demand, and each DC row reports p99 latency + SLO-violation rate
+alongside the paper's benefit metrics. ``--ws timeseries`` reproduces the
+paper's original instance-demand curve instead.
+
     PYTHONPATH=src python examples/consolidation_sim.py
+    PYTHONPATH=src python examples/consolidation_sim.py --ws timeseries
     PYTHONPATH=src python examples/consolidation_sim.py --preempt checkpoint
-    PYTHONPATH=src python examples/consolidation_sim.py --scheduler easy_backfill
+    PYTHONPATH=src python examples/consolidation_sim.py --arrival mmpp --slo 20
 """
 import argparse
 import sys
 
 from repro.core.experiment import (DC_SIZES, SC_TOTAL, run_experiment,
                                    validate_claims)
-from repro.core.types import SimConfig
+from repro.core.traces import TWO_WEEKS_S, synthetic_sdsc_blue
+from repro.core.types import SimConfig, SLOConfig
+from repro.serving.batching import ServiceTimeModel
+from repro.workloads import RequestWorkload, make_trace
+from repro.workloads.arrivals import GENERATORS
+
+WS_DEDICATED = 64           # SC: the WS department's own machine
 
 
 def main(argv=None):
@@ -20,30 +33,73 @@ def main(argv=None):
     ap.add_argument("--scheduler", default="first_fit",
                     choices=["first_fit", "fcfs", "easy_backfill"])
     ap.add_argument("--sizes", default=",".join(map(str, DC_SIZES)))
+    ap.add_argument("--ws", default="requests",
+                    choices=["requests", "timeseries"],
+                    help="WS model: request-level + SLO autoscaler (new) "
+                         "or the paper's instance-demand timeseries")
+    ap.add_argument("--arrival", default="flash_crowd",
+                    choices=sorted(GENERATORS))
+    ap.add_argument("--rate", type=float, default=3.0,
+                    help="mean WS request rate (req/s, requests mode)")
+    ap.add_argument("--slo", type=float, default=30.0,
+                    help="p99 latency target in seconds (requests mode)")
+    ap.add_argument("--days", type=float, default=2.0,
+                    help="horizon in days for requests mode (timeseries "
+                         "mode always runs the paper's 14 days)")
     args = ap.parse_args(argv)
 
     cfg = SimConfig(preempt_mode=args.preempt, scheduler=args.scheduler,
                     seed=args.seed)
     sizes = tuple(int(s) for s in args.sizes.split(","))
-    res = run_experiment(seed=args.seed, cfg=cfg, sizes=sizes)
+
+    workload = None
+    if args.ws == "requests":
+        horizon = args.days * 86400.0
+        jobs = synthetic_sdsc_blue(
+            args.seed, n_jobs=max(40, int(2672 * horizon / TWO_WEEKS_S)),
+            horizon=horizon)
+        trace = make_trace(args.arrival, args.rate, horizon, args.seed)
+        workload = RequestWorkload(trace=trace, model=ServiceTimeModel(),
+                                   slo=SLOConfig(latency_target_s=args.slo))
+        res = run_experiment(seed=args.seed, cfg=cfg, sizes=sizes,
+                             horizon=horizon, jobs=jobs, ws_demand=workload)
+    else:
+        res = run_experiment(seed=args.seed, cfg=cfg, sizes=sizes)
 
     sc = res["SC"]
     print(f"\n== Static configuration (SC): {SC_TOTAL} nodes "
-          f"(144 HPC + 64 WS) ==")
+          f"(144 HPC + {WS_DEDICATED} WS) ==")
     print(f"  completed={sc.completed}/{sc.submitted}  "
           f"avg_turnaround={sc.avg_turnaround:.0f}s  "
           f"benefit_user={sc.benefit_user:.2e}")
+    if workload is not None:
+        sc_lat = workload.realized_metrics([(0.0, WS_DEDICATED)],
+                                           horizon=horizon)
+        print(f"  WS on dedicated {WS_DEDICATED} nodes: "
+              f"{len(workload.trace)} requests, "
+              f"p99={sc_lat['p99_s']:.1f}s  "
+              f"slo_violation={100 * sc_lat['violation_rate']:.2f}%")
+
     print(f"\n== Dynamic configuration (DC), policy={args.preempt}/"
-          f"{args.scheduler} ==")
+          f"{args.scheduler}, ws={args.ws} ==")
+    lat_hdr = f" {'ws_p99':>8} {'viol%':>6}" if workload is not None else ""
     print(f"{'size':>6} {'cost%':>6} {'completed':>10} {'killed':>7} "
-          f"{'preempt':>8} {'turnaround':>11} {'ws_unmet':>9}")
+          f"{'preempt':>8} {'turnaround':>11} {'ws_unmet':>9}{lat_hdr}")
     for size in sorted(res['DC'], reverse=True):
         r = res["DC"][size]
+        lat = ""
+        if r.ws_latency is not None:
+            lat = (f" {r.ws_latency['p99_s']:>7.1f}s "
+                   f"{100 * r.ws_latency['violation_rate']:>5.2f}%")
         print(f"{size:>6} {100.0*size/SC_TOTAL:>5.1f}% {r.completed:>10} "
               f"{r.killed:>7} {r.preemptions:>8} "
-              f"{r.avg_turnaround:>10.0f}s {r.ws_unmet_node_seconds:>9.0f}")
-    claims = validate_claims(res) if 160 in res["DC"] else {}
-    print("\npaper-claim validation:", claims)
+              f"{r.avg_turnaround:>10.0f}s {r.ws_unmet_node_seconds:>9.0f}"
+              f"{lat}")
+    if args.ws == "timeseries" and 160 in res["DC"]:
+        print("\npaper-claim validation:", validate_claims(res))
+    else:
+        print("\n(paper-claim validation needs the calibrated 14-day "
+              "trace: run with --ws timeseries)")
     return 0
 
 

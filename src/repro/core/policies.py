@@ -38,9 +38,15 @@ class Tenant:
 
 
 class MultiTenantProvisionService:
-    def __init__(self, total_nodes: int):
+    def __init__(self, total_nodes: int, *, greedy_idle: bool = False):
+        """greedy_idle=True reproduces the paper's two-tenant rule verbatim
+        (ALL leftover idle nodes are dumped on the highest-priority batch
+        tenant, demand or not). The default caps grants at declared demand
+        and leaves the remainder free — a tenant that declared zero demand
+        never receives nodes it cannot use."""
         self.total = total_nodes
         self.free = total_nodes
+        self.greedy_idle = greedy_idle
         self.tenants: Dict[str, Tenant] = {}
 
     # ------------------------------------------------------------- wiring
@@ -53,6 +59,17 @@ class MultiTenantProvisionService:
         assert used + self.free == self.total, (used, self.free, self.total)
         assert self.free >= 0
         assert all(t.alloc >= 0 for t in self.tenants.values())
+        if not self.greedy_idle:
+            # demand-capped invariant: nodes sit free only when every batch
+            # tenant's declared demand is already covered (claims only drain
+            # `free`, and every demand/release change reruns provision_idle,
+            # so this holds at every quiescent point)
+            assert self.free == 0 or all(
+                t.alloc >= t.demand for t in self.tenants.values()
+                if t.kind == "batch"), \
+                (self.free, {t.name: (t.alloc, t.demand)
+                             for t in self.tenants.values()
+                             if t.kind == "batch"})
 
     def _batch_by_priority(self, reverse: bool = False) -> List[Tenant]:
         ts = [t for t in self.tenants.values() if t.kind == "batch"]
@@ -91,13 +108,17 @@ class MultiTenantProvisionService:
         return n - short
 
     def release(self, name: str, n: int):
-        """A tenant returns idle nodes; they flow to batch tenants."""
+        """A tenant returns idle nodes; they flow to batch tenants.
+
+        provision_idle runs before check(): the freed nodes must first
+        flow to batch tenants with unmet demand or the demand-capped
+        invariant would trip mid-transition."""
         t = self.tenants[name]
         n = min(n, t.alloc)
         t.alloc -= n
         self.free += n
-        self.check()
         self.provision_idle()
+        self.check()
 
     def set_batch_demand(self, name: str, demand: int):
         self.tenants[name].demand = max(0, demand)
@@ -105,8 +126,9 @@ class MultiTenantProvisionService:
 
     def provision_idle(self):
         """Paper rule 2 generalized: idle flows to batch tenants by priority,
-        each capped at its declared demand; leftover goes to the highest-
-        priority batch tenant (greedy, like the paper's 'all idle to ST')."""
+        each capped at its declared demand. Leftover stays free (default) or
+        is dumped on the highest-priority batch tenant when ``greedy_idle``
+        (the paper's literal 'all idle to ST')."""
         batch = self._batch_by_priority()
         if not batch:
             return
@@ -120,7 +142,7 @@ class MultiTenantProvisionService:
                 t.alloc += give
                 if t.on_grant is not None:
                     t.on_grant(give)
-        if self.free > 0:
+        if self.greedy_idle and self.free > 0:
             t = batch[0]
             give = self.free
             self.free = 0

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.provision import ResourceProvisionService
 from repro.core.st_cms import STServer
 from repro.core.types import Event, EventKind, Job, JobState, SimConfig
-from repro.core.ws_cms import WSServer
+from repro.core.ws_cms import WSServer, resolve_demand_events
 
 
 @dataclass
@@ -40,6 +40,9 @@ class SimResult:
     ws_avg_alloc: float
     util_timeline: List[Tuple[float, int, int, int]] = field(repr=False,
                                                              default_factory=list)
+    # request-level WS metrics (only when ws_demand is a WSDemandProvider
+    # with realized_metrics): p50/p95/p99 latency, violation rate, ...
+    ws_latency: Optional[Dict[str, float]] = None
 
     @property
     def benefit_provider(self) -> int:
@@ -54,11 +57,15 @@ class SimResult:
 
 class ConsolidationSim:
     def __init__(self, cfg: SimConfig, jobs: List[Job],
-                 ws_demand: List[Tuple[float, int]],
-                 horizon: float):
+                 ws_demand, horizon: float):
+        """ws_demand: [(t, n), ...] node-demand events OR a
+        ``WSDemandProvider`` (e.g. ``workloads.RequestWorkload``), in which
+        case demand comes from its SLO autoscaler and request-level latency
+        metrics are attached to the result."""
         self.cfg = cfg
         self.jobs = [dataclasses.replace(j) for j in jobs]
-        self.ws_demand = ws_demand
+        self.ws_demand, self.ws_provider = \
+            resolve_demand_events(ws_demand, horizon)
         self.horizon = horizon
         self.now = 0.0
         self.rng = random.Random(cfg.seed)
@@ -159,7 +166,12 @@ class ConsolidationSim:
             self.timeline.append((self.now, self.st.alloc, self.ws.alloc,
                                   self.rps.free))
         self._account(self.horizon)
-        return self._result()
+        res = self._result()
+        if self.ws_provider is not None and \
+                hasattr(self.ws_provider, "realized_metrics"):
+            res.ws_latency = self.ws_provider.realized_metrics(
+                self.ws.alloc_events, horizon=self.horizon)
+        return res
 
     def _node_fail(self):
         total_alloc = self.rps.free + self.rps.st_alloc + self.rps.ws_alloc
@@ -169,14 +181,11 @@ class ConsolidationSim:
         if r < self.rps.free:
             self.rps.node_failed("free")
         elif r < self.rps.free + self.rps.st_alloc:
-            # a running ST job loses a node -> evict (kill or checkpoint)
-            if self.st.running:
-                victim = min(self.st.running.values(),
-                             key=lambda j: (j.size, self.now - j.start_time))
-                self.st._evict(victim, self.now)
-            self.st.alloc = max(0, self.st.alloc - 1)
+            # an ST node dies: route the loss through the ST server's own
+            # eviction path so st.alloc and rps.st_alloc cannot diverge
+            # (idle nodes absorb the loss before any job is evicted)
+            self.st.node_lost(self.now)
             self.rps.node_failed("st")
-            self.st.try_schedule(self.now)
         else:
             self.ws.node_lost(self.now)
             self.rps.node_failed("ws")

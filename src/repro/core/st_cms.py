@@ -109,6 +109,24 @@ class STServer:
         self.try_schedule(now)
         return release
 
+    def node_lost(self, now: float):
+        """A provisioned node died (fault injection / runtime failure).
+
+        The loss goes through the server's own grant/release bookkeeping —
+        never decrement ``alloc`` from outside — so the provision service's
+        ``st_alloc`` and this counter cannot diverge. Idle nodes absorb the
+        loss first; only if every allocated node is busy does a job get
+        evicted (kill or checkpoint per ``preempt_mode``).
+        """
+        if self.alloc <= 0:
+            return
+        if self.idle <= 0 and self.running:
+            victim = min(self.running.values(),
+                         key=lambda j: (j.size, now - j.start_time))
+            self._evict(victim, now)
+        self.alloc -= 1
+        self.try_schedule(now)
+
     def _evict(self, job: Job, now: float):
         self._cancel_finish(job)
         del self.running[job.job_id]

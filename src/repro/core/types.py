@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 
 class JobState(enum.Enum):
@@ -43,6 +43,60 @@ class Job:
 
     def remaining(self) -> float:
         return max(0.0, self.runtime - self.checkpointed_work)
+
+
+@dataclass
+class Request:
+    """One WS request (request-level workload model, ``repro.workloads``).
+
+    The 2009 paper models WS load as an instance-demand timeseries; the
+    follow-up PhoenixCloud evaluation (arXiv:1006.1401) is per-request. A
+    request carries token counts so continuous-batching service times can be
+    derived from ``serving/batching.py``'s model.
+    """
+    req_id: int
+    arrival: float            # virtual seconds
+    prompt_tokens: int
+    decode_tokens: int
+    start: Optional[float] = None
+    finish: Optional[float] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish is None:
+            return None
+        return self.finish - self.arrival
+
+
+@dataclass(frozen=True)
+class SLOConfig:
+    """Latency service-level objective for the WS department.
+
+    The SLO is stated on a latency percentile (default p99): the autoscaler
+    provisions so the predicted percentile stays under ``latency_target_s``,
+    and the queue simulator reports the fraction of requests exceeding it
+    (``violation`` = request latency > latency_target_s).
+    """
+    latency_target_s: float = 30.0
+    percentile: float = 99.0
+    # campaign bookkeeping: a scenario cell "meets SLO" iff the realized
+    # violation rate stays under this fraction.
+    max_violation_rate: float = 0.01
+
+
+@runtime_checkable
+class WSDemandProvider(Protocol):
+    """Anything that can stand in for the raw ``ws_demand`` timeseries.
+
+    ``ConsolidationSim`` accepts either a plain ``[(t, n), ...]`` list or a
+    provider. Providers that also implement ``realized_metrics`` get called
+    back with the realized WS allocation timeline so request-level latency
+    can be measured against what the cluster actually granted.
+    """
+
+    def demand_events(self, horizon: float) -> List[Tuple[float, int]]:
+        """Planned node-demand change events over [0, horizon)."""
+        ...
 
 
 class EventKind(enum.Enum):

@@ -50,6 +50,16 @@ def demand_from_load(load: np.ndarray, dt: float,
     return out
 
 
+def resolve_demand_events(ws_demand, horizon: float):
+    """Accept either a raw [(t, n), ...] timeseries or a WSDemandProvider.
+
+    Returns (events, provider) — provider is None for plain timeseries.
+    """
+    if hasattr(ws_demand, "demand_events"):
+        return list(ws_demand.demand_events(horizon)), ws_demand
+    return list(ws_demand), None
+
+
 def demand_events(demand: np.ndarray, dt: float) -> List[Tuple[float, int]]:
     """Compress a sampled demand curve into (time, new_level) change events."""
     ev: List[Tuple[float, int]] = [(0.0, int(demand[0]))]
@@ -74,6 +84,14 @@ class WSServer:
         self.unmet_node_seconds = 0.0
         self.reclaim_events = 0
         self._last_t = 0.0
+        # realized-allocation change log: (time, alloc) whenever alloc moves.
+        # Request-level workloads replay this through the queue simulator to
+        # measure the latency the WS department actually experienced.
+        self.alloc_events: List[Tuple[float, int]] = [(0.0, 0)]
+
+    def _log_alloc(self, now: float):
+        if self.alloc_events[-1][1] != self.alloc:
+            self.alloc_events.append((now, self.alloc))
 
     def _account(self, now: float):
         short = max(0, self.demand - self.alloc)
@@ -96,7 +114,9 @@ class WSServer:
             give = self.alloc - n
             self.alloc -= give
             self._release(give)
+        self._log_alloc(now)
 
     def node_lost(self, now: float):
         self._account(now)
         self.alloc = max(0, self.alloc - 1)
+        self._log_alloc(now)

@@ -23,12 +23,17 @@ from repro.runtime.serving_pool import ServingPool
 
 class PhoenixOrchestrator:
     def __init__(self, trainer: ElasticTrainer, pool: ServingPool, *,
-                 devices=None, min_st_devices: int = 0):
+                 devices=None, min_st_devices: int = 0,
+                 slo_autoscaler=None):
+        """slo_autoscaler: optional ``workloads.SLOAutoscaler``. When set,
+        ``ws_tick_slo`` scales replicas from request-level load statistics
+        against the latency SLO instead of the §III-C utilization rule."""
         self.devs = DevicePool(devices)
         self.rps = ResourceProvisionService(self.devs.total)
         self.trainer = trainer
         self.pool = pool
         self.min_st = max(min_st_devices, trainer.model_size)
+        self.slo_autoscaler = slo_autoscaler
         self.rps.force_st_release = self._force_st_release
         self.rps.on_grant_st = self._grant_st
         self.events: List[Dict] = []
@@ -68,8 +73,33 @@ class PhoenixOrchestrator:
         self.rps.provision_idle_to_st()
 
     def ws_tick(self, offered_load_tokens: float):
-        """One WS control interval: autoscale replicas to the offered load."""
-        want = self.pool.desired_replicas(offered_load_tokens)
+        """One WS control interval: autoscale replicas to the offered load
+        (paper §III-C utilization rule)."""
+        self._scale_ws(self.pool.desired_replicas(offered_load_tokens))
+
+    def ws_tick_slo(self, rate_rps: float, mean_service_s: float,
+                    scv_service: float = 1.0,
+                    p99_service_s: Optional[float] = None):
+        """One WS control interval driven by the latency SLO.
+
+        Takes the window's request-level load statistics (arrival rate and
+        service-time shape, e.g. from ``ServiceTimeModel.service_times`` over
+        the window's token counts) and asks the SLO autoscaler for the
+        replica count whose predicted latency percentile meets the target.
+        """
+        assert self.slo_autoscaler is not None, \
+            "construct PhoenixOrchestrator(..., slo_autoscaler=...) first"
+        if p99_service_s is None:
+            # gamma-tail estimate from the SCV; using the mean here would
+            # make the predicted percentile systematically optimistic
+            p99_service_s = mean_service_s * (
+                1.0 + 2.33 * math.sqrt(max(scv_service, 0.0)))
+        want = self.slo_autoscaler.desired_nodes(
+            rate_rps, mean_service_s, scv_service, p99_service_s,
+            current=len(self.pool.replicas))
+        self._scale_ws(want)
+
+    def _scale_ws(self, want: int):
         have = len(self.pool.replicas)
         if want > have:
             got = self.rps.ws_request(want - have)

@@ -1,0 +1,22 @@
+"""Request-level WS workload subsystem.
+
+Layers: arrival processes (``arrivals``) -> replica queue + SLO metrics
+(``queueing``) -> SLO-aware autoscaling / demand provider (``autoscaler``)
+-> scenario campaign runner (``campaign``).
+"""
+from repro.workloads.arrivals import (GENERATORS, RequestTrace,
+                                      burstiness_index, diurnal_arrivals,
+                                      flash_crowd_arrivals, make_trace,
+                                      mmpp_arrivals, poisson_arrivals)
+from repro.workloads.autoscaler import RequestWorkload, SLOAutoscaler
+from repro.workloads.queueing import (QueueMetrics, capacity_steps,
+                                      predicted_percentile_latency,
+                                      sakasegawa_wait, simulate_queue)
+
+__all__ = [
+    "GENERATORS", "RequestTrace", "burstiness_index", "diurnal_arrivals",
+    "flash_crowd_arrivals", "make_trace", "mmpp_arrivals",
+    "poisson_arrivals", "RequestWorkload", "SLOAutoscaler", "QueueMetrics",
+    "capacity_steps", "predicted_percentile_latency", "sakasegawa_wait",
+    "simulate_queue",
+]

@@ -1,0 +1,224 @@
+"""Vectorized scenario campaign runner.
+
+Sweeps (policy x arrival process x cluster size x SLO) grids over the
+request-level consolidation simulator: each cell runs the full Phoenix
+pipeline — arrival trace -> SLO autoscaler -> ConsolidationSim under the
+cooperative policies -> realized request latency — then per-cell metric
+vectors are stacked into numpy arrays for batched reduction (marginal means
+over every axis). One JSON artifact comes out, consumed by
+``benchmarks/paper_figs.py`` and CI's smoke campaign.
+
+    PYTHONPATH=src python -m repro.workloads.campaign --grid tiny \
+        --out campaign.json --workers 2
+
+Cells are independent; ``--workers N`` fans them out over processes
+(fork), falling back to in-process execution if a pool cannot start.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.simulator import ConsolidationSim
+from repro.core.traces import synthetic_sdsc_blue
+from repro.core.types import SimConfig, SLOConfig
+from repro.serving.batching import ServiceTimeModel
+from repro.workloads.arrivals import GENERATORS, make_trace
+from repro.workloads.autoscaler import RequestWorkload
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioCell:
+    """One point of the campaign grid (fully picklable)."""
+    preempt: str                 # kill | checkpoint
+    scheduler: str               # first_fit | fcfs | easy_backfill
+    arrival: str                 # key into workloads.arrivals.GENERATORS
+    total_nodes: int
+    slo_target_s: float
+    rate_rps: float = 2.0        # mean WS arrival rate
+    horizon_s: float = 7200.0
+    n_jobs: int = 80
+    st_max_nodes: int = 32       # batch-trace size calibration
+    seed: int = 0
+
+    def cell_id(self) -> str:
+        return (f"{self.preempt}-{self.scheduler}-{self.arrival}"
+                f"-n{self.total_nodes}-slo{self.slo_target_s:g}"
+                f"-s{self.seed}")
+
+
+# metric columns extracted per cell, in a fixed order so the reduction is
+# one stacked [n_cells, n_metrics] array
+METRIC_KEYS = ("completed", "killed", "preemptions", "avg_turnaround_s",
+               "ws_p50_s", "ws_p95_s", "ws_p99_s", "ws_violation_rate",
+               "ws_unserved", "ws_unmet_node_seconds", "ws_peak_nodes",
+               "st_avg_alloc", "ws_avg_alloc", "wall_s")
+# axes a reduction marginalizes over
+AXIS_KEYS = ("preempt", "scheduler", "arrival", "total_nodes",
+             "slo_target_s")
+
+
+def make_grid(name: str, seed: int = 0) -> List[ScenarioCell]:
+    """Named grids. `tiny` is the CI smoke grid (8 cells, < 60 s serial)."""
+    if name == "tiny":
+        return [ScenarioCell(preempt=p, scheduler="first_fit", arrival=a,
+                             total_nodes=n, slo_target_s=30.0, seed=seed)
+                for p in ("kill", "checkpoint")
+                for a in ("poisson", "flash_crowd")
+                for n in (48, 64)]
+    if name == "small":
+        return [ScenarioCell(preempt=p, scheduler=s, arrival=a,
+                             total_nodes=n, slo_target_s=slo, seed=seed)
+                for p in ("kill", "checkpoint")
+                for s in ("first_fit", "easy_backfill")
+                for a in ("poisson", "mmpp", "flash_crowd")
+                for n in (48, 64)
+                for slo in (30.0,)]
+    if name == "full":
+        return [ScenarioCell(preempt=p, scheduler=s, arrival=a,
+                             total_nodes=n, slo_target_s=slo,
+                             horizon_s=14400.0, n_jobs=160, seed=seed)
+                for p in ("kill", "checkpoint")
+                for s in ("first_fit", "fcfs", "easy_backfill")
+                for a in sorted(GENERATORS)
+                for n in (40, 48, 64, 96)
+                for slo in (20.0, 30.0, 60.0)]
+    raise ValueError(f"unknown grid {name!r}; have tiny/small/full")
+
+
+def run_cell(cell: ScenarioCell) -> Dict:
+    """Run one scenario end-to-end; returns axes + metrics as a flat dict."""
+    t0 = time.time()
+    cfg = SimConfig(total_nodes=cell.total_nodes,
+                    preempt_mode=cell.preempt,
+                    scheduler=cell.scheduler, seed=cell.seed)
+    jobs = synthetic_sdsc_blue(seed=cell.seed, n_jobs=cell.n_jobs,
+                               horizon=cell.horizon_s,
+                               max_nodes=cell.st_max_nodes)
+    trace = make_trace(cell.arrival, cell.rate_rps, cell.horizon_s,
+                       cell.seed)
+    workload = RequestWorkload(
+        trace=trace, model=ServiceTimeModel(),
+        slo=SLOConfig(latency_target_s=cell.slo_target_s))
+    sim = ConsolidationSim(cfg, jobs, workload, horizon=cell.horizon_s)
+    res = sim.run()
+    lat = res.ws_latency or {}
+    planned = workload.demand_events(cell.horizon_s)
+    out = {k: getattr(cell, k) for k in AXIS_KEYS}
+    out["cell_id"] = cell.cell_id()
+    out["seed"] = cell.seed
+    out["metrics"] = {
+        "completed": res.completed,
+        "killed": res.killed,
+        "preemptions": res.preemptions,
+        "avg_turnaround_s": res.avg_turnaround,
+        "ws_p50_s": lat.get("p50_s", 0.0),
+        "ws_p95_s": lat.get("p95_s", 0.0),
+        "ws_p99_s": lat.get("p99_s", 0.0),
+        "ws_violation_rate": lat.get("violation_rate", 0.0),
+        "ws_unserved": lat.get("unserved", 0),
+        "ws_unmet_node_seconds": res.ws_unmet_node_seconds,
+        "ws_peak_nodes": max((n for _, n in planned), default=0),
+        "st_avg_alloc": res.st_avg_alloc,
+        "ws_avg_alloc": res.ws_avg_alloc,
+        "wall_s": time.time() - t0,
+    }
+    out["ws_requests"] = len(trace)
+    out["slo_met"] = bool(lat.get("slo_met", False))
+    return out
+
+
+def _run_cells(cells: Sequence[ScenarioCell], workers: int) -> List[Dict]:
+    if workers > 1 and len(cells) > 1:
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+            with ProcessPoolExecutor(max_workers=workers) as pool:
+                return list(pool.map(run_cell, cells))
+        except (OSError, ImportError) as e:   # no fork / restricted env
+            print(f"[campaign] process pool unavailable ({e!r}); "
+                  f"running serial", file=sys.stderr)
+    return [run_cell(c) for c in cells]
+
+
+def reduce_metrics(results: List[Dict]) -> Dict:
+    """Numpy-batched reduction: stack all cells, marginalize per axis.
+
+    Returns {"overall": {...}, "by_<axis>": {level: {...}}} with mean of
+    every metric column — the campaign's answer to "which policy holds the
+    SLO as the cluster shrinks" without re-reading per-cell rows.
+    """
+    if not results:
+        return {}
+    mat = np.array([[float(r["metrics"][k]) for k in METRIC_KEYS]
+                    for r in results])                 # [cells, metrics]
+    slo_met = np.array([r["slo_met"] for r in results], dtype=bool)
+
+    def stats(mask: np.ndarray) -> Dict:
+        sub = mat[mask]
+        d = {k: float(v) for k, v in zip(METRIC_KEYS, sub.mean(axis=0))}
+        d["cells"] = int(mask.sum())
+        d["slo_met_rate"] = float(slo_met[mask].mean())
+        return d
+
+    red = {"overall": stats(np.ones(len(results), dtype=bool))}
+    for axis in AXIS_KEYS:
+        levels = sorted({r[axis] for r in results}, key=str)
+        if len(levels) < 2:
+            continue
+        vals = np.array([str(r[axis]) for r in results])
+        red[f"by_{axis}"] = {str(lv): stats(vals == str(lv))
+                             for lv in levels}
+    return red
+
+
+def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
+                 out_path: Optional[str] = None,
+                 grid_name: str = "custom") -> Dict:
+    t0 = time.time()
+    results = _run_cells(cells, workers)
+    artifact = {
+        "schema": "phoenix-campaign-v1",
+        "grid": grid_name,
+        "n_cells": len(results),
+        "workers": workers,
+        "wall_s": time.time() - t0,
+        "metric_keys": list(METRIC_KEYS),
+        "cells": results,
+        "reductions": reduce_metrics(results),
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=1, default=float)
+    return artifact
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--grid", default="tiny",
+                    choices=["tiny", "small", "full"])
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="campaign.json")
+    args = ap.parse_args(argv)
+
+    cells = make_grid(args.grid, seed=args.seed)
+    art = run_campaign(cells, workers=args.workers, out_path=args.out,
+                       grid_name=args.grid)
+    ov = art["reductions"]["overall"]
+    print(f"campaign grid={args.grid} cells={art['n_cells']} "
+          f"wall={art['wall_s']:.1f}s -> {args.out}")
+    print(f"  slo_met_rate={ov['slo_met_rate']:.2f}  "
+          f"mean ws_p99={ov['ws_p99_s']:.1f}s  "
+          f"mean violation_rate={ov['ws_violation_rate']:.4f}  "
+          f"mean completed={ov['completed']:.1f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,10 @@ System invariants under arbitrary job sets and WS demand curves:
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.simulator import ConsolidationSim
 from repro.core.types import Job, JobState, SimConfig
