@@ -35,6 +35,7 @@ def main() -> None:
         ("beyond_paper_checkpoint_mode",
          paper_figs.beyond_paper_checkpoint_mode),
         ("request_level_slo", paper_figs.request_level_slo),
+        ("multi_department", paper_figs.multi_department),
         ("campaign_tiny", paper_figs.campaign_tiny),
         ("kernel_flash_attention", kernel_bench.bench_flash_attention),
         ("kernel_decode_attention", kernel_bench.bench_decode_attention),

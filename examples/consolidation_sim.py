@@ -6,23 +6,62 @@ into node demand, and each DC row reports p99 latency + SLO-violation rate
 alongside the paper's benefit metrics. ``--ws timeseries`` reproduces the
 paper's original instance-demand curve instead.
 
+``--mix``/``--policy`` run an N-department consolidation instead of the
+paper's two: e.g. ``--mix 2hpc2ws1be --policy proportional_share``
+consolidates 2 HPC + 2 request-level WS + 1 best-effort batch department
+under weighted proportional idle sharing, reporting per-department benefit
+metrics for each DC size.
+
     PYTHONPATH=src python examples/consolidation_sim.py
     PYTHONPATH=src python examples/consolidation_sim.py --ws timeseries
     PYTHONPATH=src python examples/consolidation_sim.py --preempt checkpoint
     PYTHONPATH=src python examples/consolidation_sim.py --arrival mmpp --slo 20
+    PYTHONPATH=src python examples/consolidation_sim.py \
+        --mix 2hpc2ws1be --policy demand_capped
 """
 import argparse
 import sys
 
 from repro.core.experiment import (DC_SIZES, SC_TOTAL, run_experiment,
                                    validate_claims)
+from repro.core.policies import POLICIES
+from repro.core.simulator import ConsolidationSim
 from repro.core.traces import TWO_WEEKS_S, synthetic_sdsc_blue
 from repro.core.types import SimConfig, SLOConfig
 from repro.serving.batching import ServiceTimeModel
 from repro.workloads import RequestWorkload, make_trace
 from repro.workloads.arrivals import GENERATORS
+from repro.workloads.campaign import MIXES, ScenarioCell, make_tenants
 
 WS_DEDICATED = 64           # SC: the WS department's own machine
+
+
+def run_mix(args, cfg, sizes):
+    """N-department consolidation sweep with per-department benefits."""
+    horizon = args.days * 86400.0
+    print(f"\n== N-department consolidation: mix={args.mix} "
+          f"policy={args.policy} preempt={args.preempt} ==")
+    for size in sizes:
+        cell = ScenarioCell(preempt=args.preempt, scheduler=args.scheduler,
+                            arrival=args.arrival, total_nodes=size,
+                            slo_target_s=args.slo, rate_rps=args.rate,
+                            horizon_s=horizon,
+                            n_jobs=max(40, int(2672 * horizon / TWO_WEEKS_S)),
+                            policy=args.policy, mix=args.mix, seed=args.seed)
+        sim = ConsolidationSim(
+            SimConfig(total_nodes=size, preempt_mode=args.preempt,
+                      scheduler=args.scheduler, seed=args.seed),
+            horizon=horizon, tenants=make_tenants(cell), policy=args.policy)
+        res = sim.run()
+        print(f"\n-- total_nodes={size} "
+              f"(cost {100.0 * size / SC_TOTAL:.1f}% of SC {SC_TOTAL}) --")
+        print(f"{'department':>12} {'kind':>8} {'prio':>5} {'avg_alloc':>10} "
+              f"{'benefit':<48}")
+        for name, t in res.tenants.items():
+            ben = "  ".join(f"{k}={v:.4g}" for k, v in t.benefit.items())
+            print(f"{name:>12} {t.kind:>8} {t.priority:>5} "
+                  f"{t.avg_alloc:>10.1f} {ben:<48}")
+    return 0
 
 
 def main(argv=None):
@@ -46,11 +85,18 @@ def main(argv=None):
     ap.add_argument("--days", type=float, default=2.0,
                     help="horizon in days for requests mode (timeseries "
                          "mode always runs the paper's 14 days)")
+    ap.add_argument("--mix", default="paper2", choices=sorted(MIXES),
+                    help="department mix; paper2 = the paper's 1 HPC + 1 WS")
+    ap.add_argument("--policy", default="paper", choices=sorted(POLICIES),
+                    help="cooperative policy for the N-department mix")
     args = ap.parse_args(argv)
 
     cfg = SimConfig(preempt_mode=args.preempt, scheduler=args.scheduler,
                     seed=args.seed)
     sizes = tuple(int(s) for s in args.sizes.split(","))
+
+    if args.mix != "paper2" or args.policy != "paper":
+        return run_mix(args, cfg, sizes)
 
     workload = None
     if args.ws == "requests":

@@ -1,0 +1,77 @@
+"""Shared CMS protocol base (paper §II).
+
+Every department's cloud-management service — the ST batch scheduler, the WS
+replica manager, any future tenant kind — speaks the same three-verb
+protocol to the Resource Provision Service:
+
+  * ``grant(n, now)``          — passively receive n nodes;
+  * ``force_release(n, now)``  — give up n nodes NOW (urgent reclaim by a
+    higher-priority tenant); returns the count actually released;
+  * ``node_lost(now)``         — one provisioned node died.
+
+``CMSBase`` owns the ``alloc`` bookkeeping and the release skeleton; the
+concrete CMS only says how to *make nodes available* (ST: free idle first,
+then kill/preempt jobs in the paper's order; WS: replicas are fungible, so
+just account the shortfall) and what to do *after* an allocation change
+(ST: try to schedule; WS: log the realized-allocation timeline). Keeping the
+skeleton here means every tenant kind inherits the same can't-desync
+property: ``alloc`` only ever moves inside these verbs, in lockstep with the
+provision service's per-tenant record.
+"""
+from __future__ import annotations
+
+
+class CMSBase:
+    """Common grant / force-release / node-lost protocol of a tenant CMS."""
+
+    kind: str = "batch"
+
+    def __init__(self):
+        self.alloc = 0                 # nodes currently provisioned to us
+
+    # ------------------------------------------------------------- hooks
+    def _before_change(self, now: float):
+        """Runs before ``alloc`` moves (accounting cut-off point)."""
+
+    def _make_available(self, n: int, now: float):
+        """Ensure n of our nodes hold no work (evict/stop as needed)."""
+
+    def _after_change(self, now: float):
+        """Runs after ``alloc`` moved (reschedule, timeline logging)."""
+
+    def demand_nodes(self) -> int:
+        """How many nodes this CMS could currently use (declared demand)."""
+        return 0
+
+    # ---------------------------------------------------------- protocol
+    def grant(self, n: int, now: float):
+        """Resource Provision Service pushes n nodes (passive receipt)."""
+        self._before_change(now)
+        self.alloc += n
+        self._after_change(now)
+
+    def force_release(self, n: int, now: float) -> int:
+        """Forced reclaim of n nodes (provision policy rule 3). Returns the
+        number actually released (== n unless alloc < n)."""
+        release = min(n, self.alloc)
+        if release <= 0:
+            return 0
+        self._before_change(now)
+        self._make_available(release, now)
+        self.alloc -= release
+        self._after_change(now)
+        return release
+
+    def node_lost(self, now: float):
+        """A provisioned node died (fault injection / runtime failure).
+
+        The loss goes through the CMS's own bookkeeping — never decrement
+        ``alloc`` from outside — so the provision service's per-tenant
+        record and this counter cannot diverge.
+        """
+        if self.alloc <= 0:
+            return
+        self._before_change(now)
+        self._make_available(1, now)
+        self.alloc -= 1
+        self._after_change(now)

@@ -1,29 +1,34 @@
-"""Multi-tenant generalization of the paper's cooperative policies.
+"""Pluggable cooperative policies for the N-department tenancy framework.
 
-The paper wires exactly two departments (one WS, one ST). Real organizations
-have many: this module generalizes the Resource Provision Service to N
-tenants with strict priorities, preserving the paper's three rules as the
-two-tenant special case:
+The 2009 paper hard-codes one policy triple for exactly two departments:
 
-  * latency-class tenants (the WS CMSes) claim urgently in priority order;
-  * ALL idle resources flow to batch-class tenants (the ST CMSes), highest
-    priority first, each taking what it can use (open jobs) before the next;
-  * a claim that cannot be met from the free pool forcibly reclaims from
-    batch tenants in REVERSE priority order (cheapest victim first), then
-    from lower-priority latency tenants.
+  * WS demands have higher priority than ST demands;
+  * ALL idle resources are provisioned to ST;
+  * an urgent WS claim forcibly reclaims from ST.
 
-`ConsolidationSim` keeps the paper's fixed 2-tenant wiring; the multi-tenant
-service is exercised by `tests/test_multitenant.py` and available to the
-runtime orchestrator for >2 departments.
+``TenantProvisionService`` (core/provision.py) generalizes the state machine
+to N registered tenants; THIS module supplies the policy objects that decide
+(a) how idle nodes are distributed across batch-class tenants and (b) in
+which order victims are drained when an urgent claim cannot be met from the
+free pool. The paper's verbatim behaviour is the named ``"paper"``
+configuration; ``"demand_capped"`` and ``"proportional_share"`` are the
+beyond-paper alternatives (arXiv:1006.1401 provisions heterogeneous
+workloads; arXiv:1004.1276 studies many consolidated communities — both
+need exactly this pluggability).
+
+A policy never mutates service state itself: it returns grant/victim plans
+and the service applies them, so every policy inherits the same conservation
+invariants.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
 class Tenant:
+    """Runtime per-tenant record held by the provision service registry."""
     name: str
     kind: str                  # "latency" | "batch"
     priority: int              # lower number = higher priority
@@ -31,122 +36,162 @@ class Tenant:
     # batch tenants: how many nodes they could still use (queue demand);
     # latency tenants: their current target demand
     demand: int = 0
-    # batch tenants: called to release n nodes (kill/preempt); returns freed
+    # proportional-share policies: relative share of idle capacity
+    weight: float = 1.0
+    # batch tenants: called to release n nodes (kill/preempt); returns freed.
+    # A batch tenant WITHOUT a release hook is not forcibly reclaimable
+    # (matches the paper service, which skips reclaim when unwired).
     on_force_release: Optional[Callable[[int], int]] = None
     # called when nodes are granted
     on_grant: Optional[Callable[[int], None]] = None
 
 
-class MultiTenantProvisionService:
-    def __init__(self, total_nodes: int, *, greedy_idle: bool = False):
-        """greedy_idle=True reproduces the paper's two-tenant rule verbatim
-        (ALL leftover idle nodes are dumped on the highest-priority batch
-        tenant, demand or not). The default caps grants at declared demand
-        and leaves the remainder free — a tenant that declared zero demand
-        never receives nodes it cannot use."""
-        self.total = total_nodes
-        self.free = total_nodes
-        self.greedy_idle = greedy_idle
-        self.tenants: Dict[str, Tenant] = {}
+class CooperativePolicy:
+    """Base cooperative policy: distribution of idle nodes + reclaim order.
 
-    # ------------------------------------------------------------- wiring
-    def register(self, tenant: Tenant):
-        assert tenant.name not in self.tenants
-        self.tenants[tenant.name] = tenant
+    ``idle_grants`` returns ``[(tenant, n), ...]`` (one entry per tenant)
+    for the service to apply; ``victim_order`` returns the tenants an urgent
+    claim may drain, most-expendable first. ``demand_driven`` tells callers
+    (the simulator) whether batch demand must be kept up to date and surplus
+    idle allocation voluntarily returned — the paper's policy ignores demand
+    entirely, so the simulator skips that bookkeeping for it.
+    """
 
-    def check(self):
-        used = sum(t.alloc for t in self.tenants.values())
-        assert used + self.free == self.total, (used, self.free, self.total)
-        assert self.free >= 0
-        assert all(t.alloc >= 0 for t in self.tenants.values())
-        if not self.greedy_idle:
-            # demand-capped invariant: nodes sit free only when every batch
-            # tenant's declared demand is already covered (claims only drain
-            # `free`, and every demand/release change reruns provision_idle,
-            # so this holds at every quiescent point)
-            assert self.free == 0 or all(
-                t.alloc >= t.demand for t in self.tenants.values()
-                if t.kind == "batch"), \
-                (self.free, {t.name: (t.alloc, t.demand)
-                             for t in self.tenants.values()
-                             if t.kind == "batch"})
+    name = "base"
+    demand_driven = True
 
-    def _batch_by_priority(self, reverse: bool = False) -> List[Tenant]:
-        ts = [t for t in self.tenants.values() if t.kind == "batch"]
-        return sorted(ts, key=lambda t: t.priority, reverse=reverse)
+    # ------------------------------------------------------------- idle
+    def idle_grants(self, free: int, batch: Sequence[Tenant]
+                    ) -> List[Tuple[Tenant, int]]:
+        raise NotImplementedError
 
-    def _latency_by_priority(self, reverse: bool = False) -> List[Tenant]:
-        ts = [t for t in self.tenants.values() if t.kind == "latency"]
-        return sorted(ts, key=lambda t: t.priority, reverse=reverse)
+    # ---------------------------------------------------------- reclaim
+    def victim_order(self, tenants: Sequence[Tenant], claimant: Tenant
+                     ) -> List[Tenant]:
+        """Paper rule 3 generalized: batch tenants in REVERSE priority order
+        (cheapest victim first), then lower-priority latency tenants."""
+        batch = sorted((t for t in tenants if t.kind == "batch"),
+                       key=lambda t: t.priority, reverse=True)
+        latency = sorted(
+            (t for t in tenants
+             if t.kind == "latency" and t.name != claimant.name
+             and t.priority > claimant.priority),
+            key=lambda t: t.priority, reverse=True)
+        return batch + latency
 
-    # ------------------------------------------------------------ requests
-    def claim(self, name: str, n: int) -> int:
-        """A latency tenant urgently claims n more nodes (paper rule 1/3)."""
-        t = self.tenants[name]
-        assert t.kind == "latency"
-        granted = min(self.free, n)
-        self.free -= granted
-        t.alloc += granted
-        short = n - granted
-        # forced reclaim: batch tenants in reverse priority order first
-        victims = self._batch_by_priority(reverse=True) + [
-            lt for lt in self._latency_by_priority(reverse=True)
-            if lt.priority > t.priority and lt.name != name]
-        for v in victims:
-            if short <= 0:
-                break
-            take = min(short, v.alloc)
-            if take <= 0:
-                continue
-            got = take
-            if v.on_force_release is not None:
-                got = min(v.on_force_release(take), take)
-            v.alloc -= got
-            t.alloc += got
-            short -= got
-        self.check()
-        return n - short
-
-    def release(self, name: str, n: int):
-        """A tenant returns idle nodes; they flow to batch tenants.
-
-        provision_idle runs before check(): the freed nodes must first
-        flow to batch tenants with unmet demand or the demand-capped
-        invariant would trip mid-transition."""
-        t = self.tenants[name]
-        n = min(n, t.alloc)
-        t.alloc -= n
-        self.free += n
-        self.provision_idle()
-        self.check()
-
-    def set_batch_demand(self, name: str, demand: int):
-        self.tenants[name].demand = max(0, demand)
-        self.provision_idle()
-
-    def provision_idle(self):
-        """Paper rule 2 generalized: idle flows to batch tenants by priority,
-        each capped at its declared demand. Leftover stays free (default) or
-        is dumped on the highest-priority batch tenant when ``greedy_idle``
-        (the paper's literal 'all idle to ST')."""
-        batch = self._batch_by_priority()
-        if not batch:
-            return
+    @staticmethod
+    def _fill_demand(free: int, batch: Sequence[Tenant]) -> Dict[str, int]:
+        """Priority-ordered fill of unmet demand, capped at ``free``."""
+        grants: Dict[str, int] = {}
         for t in batch:
-            if self.free <= 0:
+            if free <= 0:
                 break
-            want = max(0, t.demand - t.alloc)
-            give = min(want, self.free)
+            give = min(max(0, t.demand - t.alloc), free)
             if give > 0:
-                self.free -= give
-                t.alloc += give
-                if t.on_grant is not None:
-                    t.on_grant(give)
-        if self.greedy_idle and self.free > 0:
-            t = batch[0]
-            give = self.free
-            self.free = 0
-            t.alloc += give
-            if t.on_grant is not None:
-                t.on_grant(give)
-        self.check()
+                grants[t.name] = grants.get(t.name, 0) + give
+                free -= give
+        return grants
+
+
+class PaperPolicy(CooperativePolicy):
+    """The paper's verbatim configuration: WS preempts, ALL idle to ST.
+
+    Idle nodes first cover declared batch demand in priority order (a no-op
+    in the paper's two-tenant wiring, where demand is never declared), then
+    EVERYTHING left is dumped on the highest-priority batch tenant whether
+    it asked or not."""
+
+    name = "paper"
+    demand_driven = False
+
+    def idle_grants(self, free, batch):
+        grants = self._fill_demand(free, batch)
+        leftover = free - sum(grants.values())
+        if leftover > 0 and batch:
+            top = batch[0].name
+            grants[top] = grants.get(top, 0) + leftover
+        return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
+
+
+class DemandCappedIdlePolicy(CooperativePolicy):
+    """Idle flows to batch tenants by priority but stops at declared demand;
+    the remainder stays free (cheap to claim later — no kills)."""
+
+    name = "demand_capped"
+
+    def idle_grants(self, free, batch):
+        grants = self._fill_demand(free, batch)
+        return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
+
+
+class ProportionalSharePolicy(CooperativePolicy):
+    """Idle is split across batch tenants with unmet demand in proportion to
+    their ``weight`` (water-filling: a tenant whose demand saturates early
+    frees its share for the others). Leftover beyond total demand stays
+    free."""
+
+    name = "proportional_share"
+
+    def idle_grants(self, free, batch):
+        want = {t.name: max(0, t.demand - t.alloc) for t in batch}
+        grants = {t.name: 0 for t in batch}
+        remaining = free
+        while remaining > 0:
+            active = [t for t in batch if want[t.name] > 0]
+            if not active:
+                break
+            weights = {t.name: max(t.weight, 0.0) for t in active}
+            wsum = sum(weights.values())
+            if wsum <= 0:
+                weights = {t.name: 1.0 for t in active}
+                wsum = float(len(active))
+            granted_round = 0
+            for t in active:
+                share = min(want[t.name],
+                            int(remaining * weights[t.name] / wsum))
+                if share > 0:
+                    grants[t.name] += share
+                    want[t.name] -= share
+                    granted_round += share
+            if granted_round == 0:
+                # integer floors all rounded to zero: hand out single nodes
+                # in priority order so the loop always makes progress
+                for t in active:
+                    if granted_round >= remaining:
+                        break
+                    grants[t.name] += 1
+                    want[t.name] -= 1
+                    granted_round += 1
+            remaining -= granted_round
+        return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
+
+
+POLICIES: Dict[str, Callable[[], CooperativePolicy]] = {
+    PaperPolicy.name: PaperPolicy,
+    DemandCappedIdlePolicy.name: DemandCappedIdlePolicy,
+    ProportionalSharePolicy.name: ProportionalSharePolicy,
+}
+
+
+def get_policy(policy) -> CooperativePolicy:
+    """Resolve a policy name or instance to a CooperativePolicy."""
+    if isinstance(policy, CooperativePolicy):
+        return policy
+    if isinstance(policy, type) and issubclass(policy, CooperativePolicy):
+        return policy()
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown cooperative policy {policy!r}; "
+            f"have {sorted(POLICIES)}") from None
+
+
+def __getattr__(name):
+    # Historical home of the multi-tenant service (now built on the registry
+    # state machine in core/provision.py); re-exported lazily so the two
+    # modules can import in either order.
+    if name == "MultiTenantProvisionService":
+        from repro.core.provision import MultiTenantProvisionService
+        return MultiTenantProvisionService
+    raise AttributeError(name)

@@ -1,100 +1,292 @@
-"""Resource Provision Service — the organization's proxy (paper §II-B).
+"""Resource Provision Service — the organization's proxy (paper §II-B),
+generalized from the paper's fixed ST/WS pair to an N-tenant registry.
 
-Policy (verbatim from the paper):
-  * WS demands have higher priority than ST demands.
-  * All idle resources are provisioned to ST.
-  * If WS claims urgent resources, the provision service FORCES ST to return
-    the claimed amount and reallocates it to WS.
+``TenantProvisionService`` is a pure state machine over node *counts*
+(nodes are fungible; ``runtime/device_pool.py`` maps counts to concrete
+device slices). Departments register as :class:`~repro.core.policies.Tenant`
+records; a pluggable :class:`~repro.core.policies.CooperativePolicy` decides
+how idle nodes are distributed and in which order victims are drained when a
+latency-class tenant claims urgently:
 
-The service is a pure state machine over node *counts* (nodes are fungible);
-``runtime/device_pool.py`` maps counts to concrete device slices.
+  * latency tenants claim urgently; the free pool is drained first, then the
+    policy's victim chain (default: batch tenants in reverse priority order,
+    then lower-priority latency tenants) is forcibly reclaimed;
+  * released nodes flow back to batch tenants per the policy's idle rule;
+  * node failures shrink capacity until repair, attributed to the pool that
+    lost the node (with deterministic reattribution if the named pool is
+    empty — a misattributed failure must never desync ``total`` from the
+    pool sum).
+
+``ResourceProvisionService`` keeps the paper's literal two-tenant API
+(``st_alloc``/``ws_alloc``, ``on_grant_st``, ``force_st_release``, …) as a
+thin facade over a 2-tenant registry running the ``"paper"`` policy, so the
+2009 experiment stays reproducible bit-for-bit as the degenerate case.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
+
+from repro.core.policies import (CooperativePolicy, PaperPolicy, Tenant,
+                                 get_policy)
+from repro.core.types import TenantSpec
 
 
-class ResourceProvisionService:
-    def __init__(self, total_nodes: int):
+class TenantProvisionService:
+    """Registry state machine with per-tenant allocations and a pluggable
+    cooperative policy."""
+
+    def __init__(self, total_nodes: int, *, policy="paper"):
         self.total = total_nodes
         self.free = total_nodes
-        self.st_alloc = 0
-        self.ws_alloc = 0
-        # wired by the simulator / runtime
-        self.on_grant_st: Optional[Callable[[int], None]] = None
-        self.on_grant_ws: Optional[Callable[[int], None]] = None
-        self.force_st_release: Optional[Callable[[int], int]] = None
+        self.policy: CooperativePolicy = get_policy(policy)
+        # insertion-ordered: registration order is the deterministic
+        # attribution order for node failures and timeline columns
+        self.tenants: Dict[str, Tenant] = {}
+
+    # ------------------------------------------------------------- wiring
+    def register(self, tenant: Tenant) -> Tenant:
+        assert tenant.name not in self.tenants, tenant.name
+        assert tenant.name != "free", "'free' is the reserved pool name"
+        self.tenants[tenant.name] = tenant
+        return tenant
+
+    def register_spec(self, spec: TenantSpec, *,
+                      on_grant: Optional[Callable[[int], None]] = None,
+                      on_force_release: Optional[Callable[[int], int]] = None
+                      ) -> Tenant:
+        """Register a declarative ``TenantSpec`` (core/types.py)."""
+        return self.register(Tenant(
+            name=spec.name, kind=spec.kind, priority=spec.priority,
+            weight=spec.weight, on_grant=on_grant,
+            on_force_release=on_force_release))
 
     # ----------------------------------------------------------- invariants
     def check(self):
-        assert self.free >= 0 and self.st_alloc >= 0 and self.ws_alloc >= 0, \
-            (self.free, self.st_alloc, self.ws_alloc)
-        assert self.free + self.st_alloc + self.ws_alloc == self.total, \
-            (self.free, self.st_alloc, self.ws_alloc, self.total)
+        used = sum(t.alloc for t in self.tenants.values())
+        assert used + self.free == self.total, (used, self.free, self.total)
+        assert self.free >= 0
+        assert all(t.alloc >= 0 for t in self.tenants.values()), \
+            {t.name: t.alloc for t in self.tenants.values()}
+        if self.policy.demand_driven:
+            # demand-capped invariant: nodes sit free only when every batch
+            # tenant's declared demand is already covered (claims only drain
+            # `free`, and every demand/release change reruns provision_idle,
+            # so this holds at every quiescent point)
+            assert self.free == 0 or all(
+                t.alloc >= t.demand for t in self.tenants.values()
+                if t.kind == "batch"), \
+                (self.free, {t.name: (t.alloc, t.demand)
+                             for t in self.tenants.values()
+                             if t.kind == "batch"})
 
-    # ------------------------------------------------------------- WS side
-    def ws_request(self, n: int) -> int:
-        """WS claims n more nodes (urgent, highest priority).
+    def _batch_by_priority(self) -> List[Tenant]:
+        return sorted((t for t in self.tenants.values()
+                       if t.kind == "batch"), key=lambda t: t.priority)
 
-        Returns the number of nodes granted immediately from the free pool;
-        any shortfall is forcibly reclaimed from ST (the ST CMS kills /
-        preempts jobs synchronously via ``force_st_release``).
+    # ------------------------------------------------------------ requests
+    def claim(self, name: str, n: int) -> int:
+        """A latency tenant urgently claims n more nodes (paper rules 1/3).
+
+        Drains the free pool first; the shortfall is forcibly reclaimed
+        along the policy's victim chain. Batch victims release through
+        their ``on_force_release`` hook (kill/preempt happens synchronously
+        inside it); a batch tenant without the hook is skipped — the
+        service never silently confiscates nodes it cannot make the CMS
+        give up. Latency victims are reclaimed by count (their replicas
+        are fungible); their hook, when present, is still notified.
+        Returns the number of nodes actually granted.
         """
+        t = self.tenants[name]
+        assert t.kind == "latency", f"{name} is not a latency tenant"
         if n <= 0:
             return 0
         granted = min(self.free, n)
         self.free -= granted
-        self.ws_alloc += granted
+        t.alloc += granted
         short = n - granted
-        if short > 0 and self.force_st_release is not None:
-            got = self.force_st_release(short)
-            got = min(got, short)
-            self.st_alloc -= got
-            self.ws_alloc += got
-            granted += got
+        surplus = 0
+        if short > 0:
+            for v in self.policy.victim_order(self.tenants.values(), t):
+                if short <= 0:
+                    break
+                take = min(short, v.alloc)
+                if take <= 0:
+                    continue
+                if v.on_force_release is not None:
+                    # a victim may release MORE than asked (e.g. a trainer
+                    # shrinks by whole DP groups): credit the full release
+                    # so counts never desync from the devices it gave up
+                    got = min(v.on_force_release(take), v.alloc)
+                elif v.kind == "latency":
+                    got = take
+                else:
+                    continue        # unwired batch tenant: not reclaimable
+                v.alloc -= got
+                give = min(got, short)
+                t.alloc += give
+                short -= give
+                surplus += got - give
+        if surplus > 0:
+            # over-released nodes go back through the idle policy (they are
+            # typically re-granted to the very tenant that shed them)
+            self.free += surplus
+            self.provision_idle()
         self.check()
-        return granted
+        return n - short
 
-    def ws_release(self, n: int):
-        """WS releases idle nodes immediately (paper's WS management policy)."""
-        n = min(n, self.ws_alloc)
-        self.ws_alloc -= n
+    def release(self, name: str, n: int, *, reprovision: bool = True):
+        """A tenant returns idle nodes; they flow back per the idle policy.
+
+        provision_idle runs before check(): the freed nodes must first
+        flow to batch tenants with unmet demand or the demand-capped
+        invariant would trip mid-transition."""
+        t = self.tenants[name]
+        n = min(n, t.alloc)
+        t.alloc -= n
         self.free += n
+        if reprovision:
+            self.provision_idle()
         self.check()
-        self.provision_idle_to_st()
 
-    # ------------------------------------------------------------- ST side
-    def provision_idle_to_st(self):
-        """All idle resources go to ST (paper's provision policy, rule 2)."""
-        if self.free > 0:
-            n = self.free
-            self.free = 0
-            self.st_alloc += n
+    def set_demand(self, name: str, demand: int, *, provision: bool = True):
+        self.tenants[name].demand = max(0, demand)
+        if provision:
+            self.provision_idle()
+
+    # alias kept for the original multi-tenant API
+    set_batch_demand = set_demand
+
+    def provision_idle(self):
+        """Distribute free nodes to batch tenants per the cooperative
+        policy (paper rule 2 is the ``"paper"`` policy's version)."""
+        batch = self._batch_by_priority()
+        if not batch or self.free <= 0:
             self.check()
-            if self.on_grant_st is not None:
-                self.on_grant_st(n)
-
-    def st_release(self, n: int):
-        """ST voluntarily returns nodes (idle beyond need)."""
-        n = min(n, self.st_alloc)
-        self.st_alloc -= n
-        self.free += n
+            return
+        for t, give in self.policy.idle_grants(self.free, batch):
+            if give <= 0:
+                continue
+            give = min(give, self.free)
+            self.free -= give
+            t.alloc += give
+            if t.on_grant is not None:
+                t.on_grant(give)
         self.check()
 
     # ------------------------------------------------- failures (runtime)
     def node_failed(self, owner: str):
-        """A node died; capacity shrinks until repair."""
-        if owner == "free" and self.free > 0:
+        """A node died; capacity shrinks until repair.
+
+        ``owner`` is a tenant name or ``"free"``. If the attributed pool is
+        empty the failure is deterministically reattributed (free pool
+        first, then tenants in registration order) so ``total`` can never
+        desync from the pool sum; with no node anywhere a failure is
+        impossible and raises."""
+        pools = [("free", self.free)] + \
+            [(t.name, t.alloc) for t in self.tenants.values()]
+        by_name = dict(pools)
+        if owner not in by_name:
+            raise KeyError(f"unknown pool {owner!r}; have "
+                           f"{[p for p, _ in pools]}")
+        if by_name[owner] <= 0:
+            owner = next((p for p, alloc in pools if alloc > 0), None)
+            if owner is None:
+                raise ValueError("node_failed on an empty cluster "
+                                 f"(total={self.total})")
+        if owner == "free":
             self.free -= 1
-        elif owner == "st" and self.st_alloc > 0:
-            self.st_alloc -= 1
-        elif owner == "ws" and self.ws_alloc > 0:
-            self.ws_alloc -= 1
+        else:
+            self.tenants[owner].alloc -= 1
         self.total -= 1
+        if self.policy.demand_driven:
+            # a failure can drop a batch tenant below its declared demand
+            # while nodes sit free; rebalance to restore the invariant
+            self.provision_idle()
         self.check()
 
     def node_repaired(self):
         self.total += 1
         self.free += 1
-        self.check()
-        self.provision_idle_to_st()
+        self.provision_idle()   # re-provision before the invariant check:
+        self.check()            # the repaired node may cover unmet demand
+
+
+class MultiTenantProvisionService(TenantProvisionService):
+    """Original multi-tenant API (strict priorities, greedy/demand-capped
+    idle) expressed over the policy framework. ``greedy_idle=True``
+    reproduces the paper's two-tenant rule verbatim (ALL leftover idle
+    nodes are dumped on the highest-priority batch tenant, demand or not);
+    the default caps grants at declared demand and leaves the remainder
+    free."""
+
+    def __init__(self, total_nodes: int, *, greedy_idle: bool = False):
+        super().__init__(
+            total_nodes,
+            policy="paper" if greedy_idle else "demand_capped")
+        self.greedy_idle = greedy_idle
+
+
+class ResourceProvisionService(TenantProvisionService):
+    """The paper's two-tenant service (§II-B), verbatim policy:
+
+      * WS demands have higher priority than ST demands.
+      * All idle resources are provisioned to ST.
+      * If WS claims urgent resources, the provision service FORCES ST to
+        return the claimed amount and reallocates it to WS.
+
+    Implemented as a fixed 2-tenant registry under the ``"paper"`` policy;
+    the legacy attribute/callback API is preserved so the simulator, the
+    runtime orchestrator and the seed experiments are bit-for-bit
+    unchanged.
+    """
+
+    def __init__(self, total_nodes: int):
+        super().__init__(total_nodes, policy=PaperPolicy())
+        # registration order (st, ws) is a compatibility contract: node
+        # failures and timeline columns attribute in this order
+        self._st = self.register(Tenant("st", "batch", priority=1))
+        self._ws = self.register(Tenant("ws", "latency", priority=0))
+        self.on_grant_ws: Optional[Callable[[int], None]] = None
+
+    # ------------------------------------------------- legacy attributes
+    @property
+    def st_alloc(self) -> int:
+        return self._st.alloc
+
+    @property
+    def ws_alloc(self) -> int:
+        return self._ws.alloc
+
+    @property
+    def on_grant_st(self) -> Optional[Callable[[int], None]]:
+        return self._st.on_grant
+
+    @on_grant_st.setter
+    def on_grant_st(self, fn: Optional[Callable[[int], None]]):
+        self._st.on_grant = fn
+
+    @property
+    def force_st_release(self) -> Optional[Callable[[int], int]]:
+        return self._st.on_force_release
+
+    @force_st_release.setter
+    def force_st_release(self, fn: Optional[Callable[[int], int]]):
+        self._st.on_force_release = fn
+
+    # --------------------------------------------------- legacy verbs
+    def ws_request(self, n: int) -> int:
+        """WS claims n more nodes (urgent, highest priority)."""
+        return self.claim("ws", n)
+
+    def ws_release(self, n: int):
+        """WS releases idle nodes immediately (paper's WS policy)."""
+        self.release("ws", n)
+
+    def provision_idle_to_st(self):
+        """All idle resources go to ST (paper's provision policy, rule 2)."""
+        self.provision_idle()
+
+    def st_release(self, n: int):
+        """ST voluntarily returns nodes (idle beyond need); they stay free
+        until the next provisioning decision."""
+        self.release("st", n, reprovision=False)

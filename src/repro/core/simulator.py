@@ -1,8 +1,18 @@
-"""Discrete-event consolidation simulator (paper §III-D).
+"""Discrete-event consolidation simulator (paper §III-D), N-department.
 
-Wires ResourceProvisionService + ST CMS + WS CMS over a virtual-time event
-queue. Exact event ordering in virtual seconds — the paper's 100x wall-clock
-acceleration is irrelevant here (no wall-clock dependence at all).
+Wires a tenant-registry provision service (core/provision.py) + one CMS per
+department over a virtual-time event queue. Exact event ordering in virtual
+seconds — the paper's 100x wall-clock acceleration is irrelevant here (no
+wall-clock dependence at all).
+
+The paper's experiment is the degenerate 2-department case (one ST batch
+department + one WS latency department under the ``"paper"`` policy) and is
+what the legacy ``ConsolidationSim(cfg, jobs, ws_demand, horizon)`` call
+builds — bit-for-bit identical to the seed simulator (the regression test
+in tests/test_tenancy.py pins its numbers). Passing ``tenants=[TenantSpec,
+...]`` instead runs any department mix — e.g. 2 HPC + 2 request-level WS +
+1 best-effort batch tenant — under any cooperative policy from
+core/policies.py, with per-department accounting in ``SimResult.tenants``.
 
 Supports the paper's experiment (kill-mode, first-fit, SC vs DC) plus the
 beyond-paper knobs in ``SimConfig``: checkpoint-preemption, EASY backfill,
@@ -12,16 +22,81 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.provision import ResourceProvisionService
+from repro.core.provision import (ResourceProvisionService,
+                                  TenantProvisionService)
 from repro.core.st_cms import STServer
-from repro.core.types import Event, EventKind, Job, JobState, SimConfig
+from repro.core.types import (Event, EventKind, Job, JobState, SimConfig,
+                              TenantSpec)
 from repro.core.ws_cms import WSServer, resolve_demand_events
+
+# util_timeline rows beyond this are stride-downsampled (never truncated:
+# long-horizon runs keep early history at reduced resolution)
+TIMELINE_MAX_POINTS = 2000
+
+
+def downsample_timeline(timeline: List[tuple],
+                        max_points: int = TIMELINE_MAX_POINTS) -> List[tuple]:
+    """Stride-based downsampling preserving first and last rows."""
+    n = len(timeline)
+    if n <= max_points:
+        return list(timeline)
+    stride = math.ceil(n / max_points)
+    out = list(timeline[::stride])
+    if out[-1] != timeline[-1]:
+        out.append(timeline[-1])
+    return out
+
+
+@dataclass
+class TenantResult:
+    """Per-department outcome of one consolidation run."""
+    name: str
+    kind: str                         # "batch" | "latency"
+    priority: int
+    avg_alloc: float = 0.0
+    # batch departments
+    submitted: int = 0
+    completed: int = 0
+    killed: int = 0
+    preemptions: int = 0
+    avg_turnaround: float = 0.0
+    median_turnaround: float = 0.0
+    node_seconds_used: float = 0.0
+    # latency departments
+    unmet_node_seconds: float = 0.0
+    reclaim_events: int = 0
+    preempted_nodes: int = 0
+    latency: Optional[Dict[str, float]] = None
+
+    @property
+    def benefit(self) -> Dict[str, float]:
+        """Paper §III-A benefit metrics, per department.
+
+        Batch: provider benefit = completed jobs, user benefit = 1/avg
+        turnaround. Latency: demand coverage (plus SLO attainment when the
+        demand source is request-level)."""
+        if self.kind == "batch":
+            return {
+                "provider_completed_jobs": float(self.completed),
+                "user_inv_turnaround":
+                    1.0 / self.avg_turnaround if self.avg_turnaround > 0
+                    else 0.0,
+            }
+        out = {"unmet_node_seconds": self.unmet_node_seconds,
+               "demand_met": 1.0 if self.unmet_node_seconds == 0.0 else 0.0}
+        if self.latency:
+            out["p99_s"] = float(self.latency.get("p99_s", 0.0))
+            out["violation_rate"] = \
+                float(self.latency.get("violation_rate", 0.0))
+            out["slo_met"] = float(bool(self.latency.get("slo_met", False)))
+        return out
 
 
 @dataclass
@@ -38,11 +113,15 @@ class SimResult:
     st_node_seconds_used: float
     st_avg_alloc: float
     ws_avg_alloc: float
-    util_timeline: List[Tuple[float, int, int, int]] = field(repr=False,
-                                                             default_factory=list)
+    util_timeline: List[Tuple[float, ...]] = field(repr=False,
+                                                   default_factory=list)
     # request-level WS metrics (only when ws_demand is a WSDemandProvider
     # with realized_metrics): p50/p95/p99 latency, violation rate, ...
     ws_latency: Optional[Dict[str, float]] = None
+    # N-department accounting: one TenantResult per registered department
+    # (the legacy scalar fields above are the batch/latency aggregates)
+    tenants: Dict[str, TenantResult] = field(default_factory=dict)
+    policy: str = "paper"
 
     @property
     def benefit_provider(self) -> int:
@@ -54,47 +133,147 @@ class SimResult:
         """Paper §III-A: end-user benefit = 1 / avg turnaround."""
         return 1.0 / self.avg_turnaround if self.avg_turnaround > 0 else 0.0
 
+    def benefits(self) -> Dict[str, Dict[str, float]]:
+        """Per-department benefit metrics (paper §III-A generalized)."""
+        return {name: t.benefit for name, t in self.tenants.items()}
+
+
+class _TenantRuntime:
+    """One department wired into the simulator: spec + CMS + accounting."""
+
+    def __init__(self, spec: TenantSpec):
+        self.spec = spec
+        self.server = None             # STServer | WSServer
+        self.record = None             # Tenant record inside the service
+        self.jobs: List[Job] = []      # batch: this department's job copies
+        self.demand: List[Tuple[float, int]] = []     # latency: events
+        self.provider = None           # latency: WSDemandProvider or None
+        self.alloc_seconds = 0.0
+        self.used_seconds = 0.0
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def is_batch(self) -> bool:
+        return self.spec.kind == "batch"
+
 
 class ConsolidationSim:
-    def __init__(self, cfg: SimConfig, jobs: List[Job],
-                 ws_demand, horizon: float):
-        """ws_demand: [(t, n), ...] node-demand events OR a
-        ``WSDemandProvider`` (e.g. ``workloads.RequestWorkload``), in which
-        case demand comes from its SLO autoscaler and request-level latency
-        metrics are attached to the result."""
+    def __init__(self, cfg: SimConfig, jobs: Optional[List[Job]] = None,
+                 ws_demand=None, horizon: float = 0.0, *,
+                 tenants: Optional[Sequence[TenantSpec]] = None,
+                 policy=None):
+        """Two calling conventions:
+
+        * legacy / paper (degenerate 2-department): ``ConsolidationSim(cfg,
+          jobs, ws_demand, horizon)``. ws_demand: [(t, n), ...] node-demand
+          events OR a ``WSDemandProvider`` (e.g. ``workloads.
+          RequestWorkload``), in which case demand comes from its SLO
+          autoscaler and request-level latency metrics are attached.
+        * N-department: ``ConsolidationSim(cfg, horizon=..., tenants=[...],
+          policy="paper"|"demand_capped"|"proportional_share"|instance)``.
+          Each batch spec carries a job trace; each latency spec a demand
+          timeseries or provider.
+        """
         self.cfg = cfg
-        self.jobs = [dataclasses.replace(j) for j in jobs]
-        self.ws_demand, self.ws_provider = \
-            resolve_demand_events(ws_demand, horizon)
         self.horizon = horizon
         self.now = 0.0
         self.rng = random.Random(cfg.seed)
         self._q: List[Event] = []
         self._seq = 0
-        self._job_epoch: Dict[int, int] = {}
+        self._job_epoch: Dict[Tuple[str, int], int] = {}
 
-        self.rps = ResourceProvisionService(cfg.total_nodes)
-        self.st = STServer(cfg, self._schedule_finish, self._cancel_finish)
-        self.ws = WSServer(cfg, self._ws_request, self._ws_release)
-        self.rps.on_grant_st = lambda n: self.st.grant(n, self.now)
-        self.rps.force_st_release = \
-            lambda n: self.st.force_release(n, self.now)
+        self._degenerate = tenants is None
+        if self._degenerate:
+            # the paper's fixed wiring; registration order (st, ws) is part
+            # of the reproducibility contract (failure attribution order,
+            # timeline columns)
+            tenants = [
+                TenantSpec("st", "batch", priority=1,
+                           jobs=list(jobs) if jobs is not None else []),
+                TenantSpec("ws", "latency", priority=0,
+                           demand=[] if ws_demand is None else ws_demand),
+            ]
+            assert policy is None or str(getattr(
+                policy, "name", policy)) == "paper", \
+                "the legacy 2-tenant call runs the paper policy; pass " \
+                "tenants=[...] to choose another"
+            policy = "paper"
+        else:
+            assert jobs is None and ws_demand is None, \
+                "pass demand sources inside TenantSpec when using tenants=[]"
+            policy = policy if policy is not None else "paper"
+        names = [s.name for s in tenants]
+        assert len(set(names)) == len(names), f"duplicate tenants: {names}"
+
+        if self._degenerate:
+            self.svc: TenantProvisionService = \
+                ResourceProvisionService(cfg.total_nodes)
+        else:
+            self.svc = TenantProvisionService(cfg.total_nodes, policy=policy)
+        self.rps = self.svc            # legacy attribute name
+        self.policy_name = self.svc.policy.name
+        self._demand_driven = self.svc.policy.demand_driven
+
+        self._runtimes: List[_TenantRuntime] = []
+        for spec in tenants:
+            rt = _TenantRuntime(spec)
+            if spec.kind == "batch":
+                rt.jobs = [dataclasses.replace(j) for j in (spec.jobs or [])]
+                rt.server = STServer(
+                    cfg,
+                    (lambda job, t, rt=rt: self._schedule_finish(rt, job, t)),
+                    (lambda job, rt=rt: self._cancel_finish(rt, job)))
+                on_grant = (lambda n, s=rt.server: s.grant(n, self.now))
+                on_force = (lambda n, s=rt.server:
+                            s.force_release(n, self.now))
+            else:
+                rt.demand, rt.provider = \
+                    resolve_demand_events(spec.demand or [], horizon)
+                rt.server = WSServer(
+                    cfg,
+                    request=(lambda n, name=spec.name:
+                             self.svc.claim(name, n)),
+                    release=(lambda n, name=spec.name:
+                             self.svc.release(name, n)))
+                on_grant = None
+                on_force = (lambda n, s=rt.server:
+                            s.force_release(n, self.now))
+            if spec.name in self.svc.tenants:   # degenerate: pre-registered
+                rt.record = self.svc.tenants[spec.name]
+                rt.record.on_grant = on_grant
+                rt.record.on_force_release = on_force
+                rt.record.weight = spec.weight
+            else:
+                rt.record = self.svc.register_spec(
+                    spec, on_grant=on_grant, on_force_release=on_force)
+            self._runtimes.append(rt)
+
+        self._batch = [rt for rt in self._runtimes if rt.is_batch]
+        self._latency = [rt for rt in self._runtimes if not rt.is_batch]
+        # legacy aliases (the paper wiring); first of each class otherwise
+        self.st = self._batch[0].server if self._batch else None
+        self.ws = self._latency[0].server if self._latency else None
+        self.jobs: List[Job] = [j for rt in self._batch for j in rt.jobs]
+        self.ws_demand = self._latency[0].demand if self._latency else []
+        self.ws_provider = self._latency[0].provider if self._latency \
+            else None
 
         # timeline accounting
         self._last_t = 0.0
-        self._st_node_seconds = 0.0
-        self._st_alloc_seconds = 0.0
-        self._ws_alloc_seconds = 0.0
-        self.timeline: List[Tuple[float, int, int, int]] = []
+        self.timeline: List[Tuple[float, ...]] = []
 
     # --------------------------------------------------------------- events
     def _push(self, t: float, kind: EventKind, payload=None):
         self._seq += 1
         heapq.heappush(self._q, Event(t, self._seq, kind, payload))
 
-    def _schedule_finish(self, job: Job, t: float):
-        epoch = self._job_epoch.get(job.job_id, 0) + 1
-        self._job_epoch[job.job_id] = epoch
+    def _schedule_finish(self, rt: _TenantRuntime, job: Job, t: float):
+        key = (rt.name, job.job_id)
+        epoch = self._job_epoch.get(key, 0) + 1
+        self._job_epoch[key] = epoch
         t_eff = t
         if self.cfg.straggler_frac > 0 and \
                 self.rng.random() < self.cfg.straggler_frac:
@@ -106,40 +285,57 @@ class ConsolidationSim:
                 t_eff = min(slow, spec)
             else:
                 t_eff = slow
-        self._push(t_eff, EventKind.JOB_FINISH, (job, epoch))
+        self._push(t_eff, EventKind.JOB_FINISH, (rt, job, epoch))
 
-    def _cancel_finish(self, job: Job):
-        self._job_epoch[job.job_id] = self._job_epoch.get(job.job_id, 0) + 1
-
-    # ------------------------------------------------------------- WS wiring
-    def _ws_request(self, n: int) -> int:
-        return self.rps.ws_request(n)
-
-    def _ws_release(self, n: int):
-        self.rps.ws_release(n)
+    def _cancel_finish(self, rt: _TenantRuntime, job: Job):
+        key = (rt.name, job.job_id)
+        self._job_epoch[key] = self._job_epoch.get(key, 0) + 1
 
     # ---------------------------------------------------------- accounting
     def _account(self, t: float):
         dt = t - self._last_t
         if dt > 0:
-            self._st_node_seconds += self.st.used * dt
-            self._st_alloc_seconds += self.st.alloc * dt
-            self._ws_alloc_seconds += self.ws.alloc * dt
+            for rt in self._runtimes:
+                rt.alloc_seconds += rt.record.alloc * dt
+                if rt.is_batch:
+                    rt.used_seconds += rt.server.used * dt
             self._last_t = t
+
+    def _update_demands(self):
+        """Demand-aware policies: keep each batch department's declared
+        demand current and voluntarily return surplus idle allocation (the
+        paper's policy ignores demand, so this is skipped for it)."""
+        if not self._demand_driven:
+            return
+        for rt in self._batch:
+            self.svc.set_demand(rt.name, rt.server.demand_nodes(),
+                                provision=False)
+        self.svc.provision_idle()   # one pass after ALL demands are current
+        for rt in self._batch:
+            surplus = rt.record.alloc - max(rt.record.demand,
+                                            rt.server.used)
+            if surplus > 0:
+                freed = rt.server.release_idle(surplus)
+                if freed > 0:
+                    self.svc.release(rt.name, freed)
 
     # ---------------------------------------------------------------- run
     def run(self) -> SimResult:
-        for job in self.jobs:
-            self._push(job.submit_time, EventKind.JOB_SUBMIT, job)
-        for t, n in self.ws_demand:
-            self._push(t, EventKind.WS_DEMAND, n)
+        for rt in self._batch:
+            for job in rt.jobs:
+                self._push(job.submit_time, EventKind.JOB_SUBMIT, (rt, job))
+        for rt in self._latency:
+            for t, n in rt.demand:
+                self._push(t, EventKind.WS_DEMAND, (rt, n))
         if self.cfg.node_mtbf > 0:
             self._push(self.rng.expovariate(
                 self.cfg.total_nodes / self.cfg.node_mtbf),
                 EventKind.NODE_FAIL)
 
-        # initial provision: everything idle goes to ST
-        self.rps.provision_idle_to_st()
+        # initial provision: everything idle flows per the policy (paper:
+        # all of it to the highest-priority batch department)
+        self._update_demands()
+        self.svc.provision_idle()
 
         while self._q:
             ev = heapq.heappop(self._q)
@@ -148,68 +344,117 @@ class ConsolidationSim:
             self._account(ev.time)
             self.now = ev.time
             if ev.kind is EventKind.JOB_SUBMIT:
-                self.st.submit(ev.payload, self.now)
+                rt, job = ev.payload
+                rt.server.submit(job, self.now)
             elif ev.kind is EventKind.JOB_FINISH:
-                job, epoch = ev.payload
-                if self._job_epoch.get(job.job_id) == epoch and \
+                rt, job, epoch = ev.payload
+                if self._job_epoch.get((rt.name, job.job_id)) == epoch and \
                         job.state is JobState.RUNNING:
-                    self.st.job_finished(job, self.now)
+                    rt.server.job_finished(job, self.now)
             elif ev.kind is EventKind.WS_DEMAND:
-                self.ws.set_demand(ev.payload, self.now)
+                rt, n = ev.payload
+                rt.server.set_demand(n, self.now)
             elif ev.kind is EventKind.NODE_FAIL:
                 self._node_fail()
                 self._push(self.now + self.rng.expovariate(
                     self.cfg.total_nodes / self.cfg.node_mtbf),
                     EventKind.NODE_FAIL)
             elif ev.kind is EventKind.NODE_REPAIR:
-                self.rps.node_repaired()
-            self.timeline.append((self.now, self.st.alloc, self.ws.alloc,
-                                  self.rps.free))
+                self.svc.node_repaired()
+            self._update_demands()     # no-op under the paper policy
+            self.timeline.append(
+                (self.now,
+                 *(rt.record.alloc for rt in self._runtimes),
+                 self.svc.free))
         self._account(self.horizon)
-        res = self._result()
-        if self.ws_provider is not None and \
-                hasattr(self.ws_provider, "realized_metrics"):
-            res.ws_latency = self.ws_provider.realized_metrics(
-                self.ws.alloc_events, horizon=self.horizon)
-        return res
+        return self._result()
 
     def _node_fail(self):
-        total_alloc = self.rps.free + self.rps.st_alloc + self.rps.ws_alloc
+        total_alloc = self.svc.free + sum(rt.record.alloc
+                                          for rt in self._runtimes)
         if total_alloc <= 1:
             return
         r = self.rng.random() * total_alloc
-        if r < self.rps.free:
-            self.rps.node_failed("free")
-        elif r < self.rps.free + self.rps.st_alloc:
-            # an ST node dies: route the loss through the ST server's own
-            # eviction path so st.alloc and rps.st_alloc cannot diverge
-            # (idle nodes absorb the loss before any job is evicted)
-            self.st.node_lost(self.now)
-            self.rps.node_failed("st")
+        # attribution intervals: free pool first, then departments in
+        # registration order (the paper wiring's order is st, ws)
+        if r < self.svc.free:
+            self.svc.node_failed("free")
         else:
-            self.ws.node_lost(self.now)
-            self.rps.node_failed("ws")
-            # WS immediately re-requests to cover its demand
-            self.ws.set_demand(self.ws.demand, self.now)
+            acc = self.svc.free
+            victim = self._runtimes[-1]
+            for rt in self._runtimes:
+                acc += rt.record.alloc
+                if r < acc:
+                    victim = rt
+                    break
+            # route the loss through the CMS's own eviction path so the
+            # server's alloc and the service's record cannot diverge (idle
+            # nodes absorb the loss before any job/replica is evicted)
+            victim.server.node_lost(self.now)
+            self.svc.node_failed(victim.name)
+            if not victim.is_batch:
+                # a latency department immediately re-requests to cover
+                # its demand
+                victim.server.set_demand(victim.server.demand, self.now)
         self._push(self.now + self.cfg.node_repair_time, EventKind.NODE_REPAIR)
 
-    def _result(self) -> SimResult:
-        completed = [j for j in self.jobs if j.state is JobState.COMPLETED]
-        killed = [j for j in self.jobs if j.state is JobState.KILLED]
-        tats = sorted(j.turnaround for j in completed)
+    # ------------------------------------------------------------- results
+    def _tenant_result(self, rt: _TenantRuntime) -> TenantResult:
         horizon = self.horizon
+        res = TenantResult(name=rt.name, kind=rt.spec.kind,
+                           priority=rt.spec.priority,
+                           avg_alloc=rt.alloc_seconds / horizon
+                           if horizon > 0 else 0.0)
+        if rt.is_batch:
+            completed = [j for j in rt.jobs if j.state is JobState.COMPLETED]
+            tats = sorted(j.turnaround for j in completed)
+            res.submitted = len(rt.jobs)
+            res.completed = len(completed)
+            res.killed = sum(j.state is JobState.KILLED for j in rt.jobs)
+            res.preemptions = rt.server.preemptions
+            res.avg_turnaround = float(np.mean(tats)) if tats else 0.0
+            res.median_turnaround = float(np.median(tats)) if tats else 0.0
+            res.node_seconds_used = rt.used_seconds
+        else:
+            res.unmet_node_seconds = rt.server.unmet_node_seconds
+            res.reclaim_events = rt.server.reclaim_events
+            res.preempted_nodes = rt.server.preempted_nodes
+            if rt.provider is not None and \
+                    hasattr(rt.provider, "realized_metrics"):
+                res.latency = rt.provider.realized_metrics(
+                    rt.server.alloc_events, horizon=horizon)
+        return res
+
+    def _result(self) -> SimResult:
+        horizon = self.horizon
+        tenants = {rt.name: self._tenant_result(rt)
+                   for rt in self._runtimes}
+        batch = [tenants[rt.name] for rt in self._batch]
+        latency = [tenants[rt.name] for rt in self._latency]
+
+        # cross-department aggregates (for the degenerate paper wiring
+        # these ARE the single ST/WS departments' numbers, bit-for-bit)
+        completed = [j for rt in self._batch for j in rt.jobs
+                     if j.state is JobState.COMPLETED]
+        tats = sorted(j.turnaround for j in completed)
         return SimResult(
             total_nodes=self.cfg.total_nodes,
-            submitted=len(self.jobs),
+            submitted=sum(t.submitted for t in batch),
             completed=len(completed),
-            killed=len(killed),
-            preemptions=self.st.preemptions,
+            killed=sum(t.killed for t in batch),
+            preemptions=sum(t.preemptions for t in batch),
             avg_turnaround=float(np.mean(tats)) if tats else 0.0,
             median_turnaround=float(np.median(tats)) if tats else 0.0,
-            ws_unmet_node_seconds=self.ws.unmet_node_seconds,
-            ws_reclaim_events=self.ws.reclaim_events,
-            st_node_seconds_used=self._st_node_seconds,
-            st_avg_alloc=self._st_alloc_seconds / horizon,
-            ws_avg_alloc=self._ws_alloc_seconds / horizon,
-            util_timeline=self.timeline[-2000:],
+            ws_unmet_node_seconds=sum(t.unmet_node_seconds
+                                      for t in latency),
+            ws_reclaim_events=sum(t.reclaim_events for t in latency),
+            st_node_seconds_used=sum(t.node_seconds_used for t in batch),
+            st_avg_alloc=sum(rt.alloc_seconds for rt in self._batch)
+            / horizon if horizon > 0 else 0.0,
+            ws_avg_alloc=sum(rt.alloc_seconds for rt in self._latency)
+            / horizon if horizon > 0 else 0.0,
+            util_timeline=downsample_timeline(self.timeline),
+            ws_latency=latency[0].latency if latency else None,
+            tenants=tenants,
+            policy=self.policy_name,
         )

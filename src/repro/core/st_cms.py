@@ -9,21 +9,29 @@ ST Server resource-management policy (verbatim):
 ``preempt_mode="checkpoint"`` (beyond-paper) checkpoints instead of killing:
 the job is requeued with its completed work preserved (plus a checkpoint
 overhead), which materially improves the ST benefit curve (EXPERIMENTS.md).
+
+The grant / force-release / node-lost protocol itself lives in
+``core/cms.py`` (shared with every other tenant kind); this class supplies
+the batch-specific parts: the job queue, the paper's kill order, and the
+scheduler hookup.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional
 
+from repro.core.cms import CMSBase
 from repro.core.scheduler import SCHEDULERS
 from repro.core.types import Job, JobState, SimConfig
 
 
-class STServer:
+class STServer(CMSBase):
+    kind = "batch"
+
     def __init__(self, cfg: SimConfig,
                  schedule_finish: Callable[[Job, float], None],
                  cancel_finish: Callable[[Job], None]):
+        super().__init__()
         self.cfg = cfg
-        self.alloc = 0                 # nodes currently provisioned to ST
         self.queue: List[Job] = []
         self.running: Dict[int, Job] = {}
         self._schedule_finish = schedule_finish
@@ -42,14 +50,15 @@ class STServer:
     def idle(self) -> int:
         return self.alloc - self.used
 
+    def demand_nodes(self) -> int:
+        """Declared demand: nodes busy now plus everything queued could use
+        (drives demand-aware cooperative policies; the paper's policy
+        ignores it)."""
+        return self.used + sum(j.size for j in self.queue)
+
     # ------------------------------------------------------------ events
     def submit(self, job: Job, now: float):
         self.queue.append(job)
-        self.try_schedule(now)
-
-    def grant(self, n: int, now: float):
-        """Resource Provision Service pushes n nodes (passive receipt)."""
-        self.alloc += n
         self.try_schedule(now)
 
     def job_finished(self, job: Job, now: float):
@@ -85,16 +94,11 @@ class STServer:
             self._schedule_finish(job, finish)
 
     # ------------------------------------------------------------ reclaim
-    def force_release(self, n: int, now: float) -> int:
-        """Forced reclaim of n nodes (provision policy rule 3).
-
-        Frees idle nodes first, then kills/preempts jobs ordered by
-        (size asc, running-time asc) — the paper's kill order. Returns the
-        number of nodes actually released (== n unless alloc < n).
-        """
-        release = min(n, self.alloc)
-        freed = min(self.idle, release)
-        still_needed = release - freed
+    def _make_available(self, n: int, now: float):
+        """Free n nodes: idle first, then kill/preempt jobs ordered by
+        (size asc, running-time asc) — the paper's kill order. Eviction may
+        free more than needed; the surplus stays idle in ST."""
+        still_needed = n - self.idle
         if still_needed > 0:
             victims = sorted(self.running.values(),
                              key=lambda j: (j.size, now - j.start_time))
@@ -104,28 +108,16 @@ class STServer:
                     break
                 got += v.size
                 self._evict(v, now)
-            # eviction may free more than needed; the surplus stays idle in ST
-        self.alloc -= release
-        self.try_schedule(now)
-        return release
 
-    def node_lost(self, now: float):
-        """A provisioned node died (fault injection / runtime failure).
-
-        The loss goes through the server's own grant/release bookkeeping —
-        never decrement ``alloc`` from outside — so the provision service's
-        ``st_alloc`` and this counter cannot diverge. Idle nodes absorb the
-        loss first; only if every allocated node is busy does a job get
-        evicted (kill or checkpoint per ``preempt_mode``).
-        """
-        if self.alloc <= 0:
-            return
-        if self.idle <= 0 and self.running:
-            victim = min(self.running.values(),
-                         key=lambda j: (j.size, now - j.start_time))
-            self._evict(victim, now)
-        self.alloc -= 1
+    def _after_change(self, now: float):
         self.try_schedule(now)
+
+    def release_idle(self, n: int) -> int:
+        """Voluntarily give back up to n idle nodes (demand-aware policies);
+        returns the count actually freed. Never touches running jobs."""
+        n = max(0, min(n, self.idle))
+        self.alloc -= n
+        return n
 
     def _evict(self, job: Job, now: float):
         self._cancel_finish(job)

@@ -99,6 +99,42 @@ class WSDemandProvider(Protocol):
         ...
 
 
+@dataclass
+class TenantSpec:
+    """Declaration of one department (tenant) sharing the cluster.
+
+    The 2009 paper wires exactly two departments — one HPC/batch (ST) and
+    one Web-service (WS). ``TenantSpec`` is the N-department generalization:
+    a registry of these specs drives ``TenantProvisionService``
+    (core/provision.py), ``ConsolidationSim`` and the runtime orchestrator.
+
+    kind:
+      * ``"batch"``    — throughput-oriented CMS (an ST department): demand
+        comes from a job trace (``jobs``); receives idle nodes passively.
+      * ``"latency"``  — latency-sensitive CMS (a WS department): demand
+        comes from a node-demand timeseries or a ``WSDemandProvider``
+        (``demand``); claims urgently, preempting lower-priority tenants.
+
+    priority: lower number = higher priority, used both for urgent claims
+    (who may preempt whom) and for idle distribution order. A best-effort
+    department is simply a batch tenant with the largest priority number.
+
+    weight: relative share for proportional-share policies (ignored by the
+    paper's policy).
+    """
+    name: str
+    kind: str = "batch"                    # "batch" | "latency"
+    priority: int = 0
+    weight: float = 1.0
+    # demand sources --------------------------------------------------
+    jobs: Optional[List["Job"]] = None     # batch: HPC job trace
+    demand: object = None                  # latency: [(t, n), ...] or provider
+    slo: Optional[SLOConfig] = None        # latency: SLO for the autoscaler
+
+    def __post_init__(self):
+        assert self.kind in ("batch", "latency"), self.kind
+
+
 class EventKind(enum.Enum):
     JOB_SUBMIT = 1
     JOB_FINISH = 2

@@ -8,6 +8,10 @@ instances, +1 instance if avg CPU utilization > 80% over the past 20 s,
 -1 instance if it drops below 80%·(n-1)/n, floor n = 1. ``demand_from_load``
 turns a request-rate trace into the instance-demand curve of Fig. 5; the
 same rule drives real serving replicas in ``runtime/serving_pool.py``.
+
+The grant / force-release / node-lost protocol lives in ``core/cms.py``;
+this class adds the latency-tenant specifics: demand tracking against the
+provision service, shortfall accounting, and the realized-allocation log.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.cms import CMSBase
 from repro.core.types import SimConfig
 
 UTIL_WINDOW_S = 20.0
@@ -69,25 +74,31 @@ def demand_events(demand: np.ndarray, dt: float) -> List[Tuple[float, int]]:
     return ev
 
 
-class WSServer:
+class WSServer(CMSBase):
     """Tracks instance demand vs allocation; talks to the provision service."""
+
+    kind = "latency"
 
     def __init__(self, cfg: SimConfig,
                  request: Callable[[int], int],
                  release: Callable[[int], None]):
+        super().__init__()
         self.cfg = cfg
-        self.alloc = 0
         self.demand = 0
         self._request = request
         self._release = release
         # diagnostics
         self.unmet_node_seconds = 0.0
         self.reclaim_events = 0
+        self.preempted_nodes = 0       # nodes lost to higher-priority claims
         self._last_t = 0.0
         # realized-allocation change log: (time, alloc) whenever alloc moves.
         # Request-level workloads replay this through the queue simulator to
         # measure the latency the WS department actually experienced.
         self.alloc_events: List[Tuple[float, int]] = [(0.0, 0)]
+
+    def demand_nodes(self) -> int:
+        return self.demand
 
     def _log_alloc(self, now: float):
         if self.alloc_events[-1][1] != self.alloc:
@@ -98,6 +109,23 @@ class WSServer:
         self.unmet_node_seconds += short * (now - self._last_t)
         self._last_t = now
 
+    # ------------------------------------------- CMS protocol (core/cms.py)
+    def _before_change(self, now: float):
+        self._account(now)
+
+    def _after_change(self, now: float):
+        self._log_alloc(now)
+
+    def force_release(self, n: int, now: float) -> int:
+        """A higher-priority tenant preempts n of our nodes. Replicas are
+        fungible, so no per-node work is lost beyond the in-flight requests
+        the queue simulator will re-run; the shortfall shows up in
+        ``unmet_node_seconds`` until demand is next re-claimed."""
+        got = super().force_release(n, now)
+        self.preempted_nodes += got
+        return got
+
+    # ---------------------------------------------------- demand tracking
     def set_demand(self, n: int, now: float):
         self._account(now)
         self.demand = n
@@ -114,9 +142,4 @@ class WSServer:
             give = self.alloc - n
             self.alloc -= give
             self._release(give)
-        self._log_alloc(now)
-
-    def node_lost(self, now: float):
-        self._account(now)
-        self.alloc = max(0, self.alloc - 1)
         self._log_alloc(now)

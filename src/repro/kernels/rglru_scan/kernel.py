@@ -27,15 +27,19 @@ def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, carry_ref, *, block_s: int):
     def _init():
         carry_ref[...] = h0_ref[...].astype(jnp.float32)
 
+    # all ref indices are Slices (pl.dslice), never bare ints: older JAX
+    # interpret-mode discharge rules reject scalar int indices
+    row = (pl.dslice(0, 1),)
+
     def step(t, h):
-        a_t = a_ref[0, t].astype(jnp.float32)            # [bw]
-        b_t = b_ref[0, t].astype(jnp.float32)
-        h = a_t * h + b_t
-        pl.store(o_ref, (0, pl.dslice(t, 1), slice(None)),
-                 h[None].astype(o_ref.dtype))
+        a_t = pl.load(a_ref, row + (pl.dslice(t, 1), slice(None)))[0, 0]
+        b_t = pl.load(b_ref, row + (pl.dslice(t, 1), slice(None)))[0, 0]
+        h = a_t.astype(jnp.float32) * h + b_t.astype(jnp.float32)   # [bw]
+        pl.store(o_ref, row + (pl.dslice(t, 1), slice(None)),
+                 h[None, None].astype(o_ref.dtype))
         return h
 
-    h = jax.lax.fori_loop(0, block_s, step, carry_ref[0])
+    h = jax.lax.fori_loop(0, block_s, step, carry_ref[...][0])
     carry_ref[...] = h[None]
 
 

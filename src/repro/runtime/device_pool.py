@@ -1,58 +1,77 @@
-"""Maps Phoenix node counts onto concrete JAX devices.
+"""Maps Phoenix node counts onto concrete JAX devices, for N tenants.
 
 The provision service reasons in fungible node counts; this pool assigns
-actual devices: the ST side receives rectangular groups (multiples of the
-training job's model-parallel width) so TP collectives stay intact; the WS
-side receives single devices per serving replica.
+actual devices to named tenant groups: batch tenants (elastic trainers)
+receive rectangular groups (multiples of the training job's model-parallel
+width) so TP collectives stay intact; latency tenants (serving pools)
+receive single devices per replica. The legacy two-group (``st``/``ws``)
+interface is preserved as aliases over the named groups.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 
 
 class DevicePool:
-    def __init__(self, devices: Optional[Sequence] = None):
+    def __init__(self, devices: Optional[Sequence] = None,
+                 groups: Sequence[str] = ("st", "ws")):
         self.devices = list(devices if devices is not None else jax.devices())
         self.free = list(self.devices)
-        self.st: List = []
-        self.ws: List = []
+        self.groups: Dict[str, List] = {g: [] for g in groups}
 
     @property
     def total(self) -> int:
         return len(self.devices)
 
+    def add_group(self, name: str) -> None:
+        assert name not in self.groups, name
+        self.groups[name] = []
+
     def check(self):
-        assert len(self.free) + len(self.st) + len(self.ws) == self.total
+        assigned = sum(len(g) for g in self.groups.values())
+        assert len(self.free) + assigned == self.total, \
+            (len(self.free), {k: len(v) for k, v in self.groups.items()},
+             self.total)
+
+    # -------------------------------------------------------- named groups
+    def grant(self, name: str, n: int) -> List:
+        """Move up to n free devices into the named group."""
+        n = min(n, len(self.free))
+        got, self.free = self.free[:n], self.free[n:]
+        self.groups[name].extend(got)
+        self.check()
+        return got
+
+    def reclaim(self, name: str, n: int) -> List:
+        """Take n devices back from the named group (most recent first;
+        the caller must resize/stop the workload on them)."""
+        grp = self.groups[name]
+        n = min(n, len(grp))
+        got = grp[-n:] if n else []
+        self.groups[name] = grp[:-n] if n else grp
+        self.free.extend(got)
+        self.check()
+        return got
+
+    # ------------------------------------------------- legacy two-tenant API
+    @property
+    def st(self) -> List:
+        return self.groups["st"]
+
+    @property
+    def ws(self) -> List:
+        return self.groups["ws"]
 
     def grant_st(self, n: int) -> List:
-        n = min(n, len(self.free))
-        got, self.free = self.free[:n], self.free[n:]
-        self.st.extend(got)
-        self.check()
-        return got
+        return self.grant("st", n)
 
     def grant_ws(self, n: int) -> List:
-        n = min(n, len(self.free))
-        got, self.free = self.free[:n], self.free[n:]
-        self.ws.extend(got)
-        self.check()
-        return got
+        return self.grant("ws", n)
 
     def reclaim_st(self, n: int) -> List:
-        """Take n devices back from ST (caller must resize the trainer)."""
-        n = min(n, len(self.st))
-        got = self.st[-n:]
-        self.st = self.st[:-n] if n else self.st
-        self.free.extend(got)
-        self.check()
-        return got
+        return self.reclaim("st", n)
 
     def release_ws(self, n: int) -> List:
-        n = min(n, len(self.ws))
-        got = self.ws[-n:]
-        self.ws = self.ws[:-n] if n else self.ws
-        self.free.extend(got)
-        self.check()
-        return got
+        return self.reclaim("ws", n)

@@ -27,6 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.launch.mesh import set_mesh
 from repro.sharding import partitioning as pt
 from repro.training.optimizer import OptState
 from repro.training.train_step import TrainState, init_state, make_train_step
@@ -77,7 +78,7 @@ class ElasticTrainer:
                                        self.global_batch)
         restored = self._try_restore()
         if not restored:
-            with jax.set_mesh(self.mesh):
+            with set_mesh(self.mesh):
                 state = init_state(jax.random.PRNGKey(self.seed), self.cfg)
             self.state = jax.device_put(state, self._state_shardings())
         self._compile()

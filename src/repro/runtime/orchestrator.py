@@ -1,27 +1,198 @@
 """Runtime orchestrator: the paper's policies driving REAL JAX workloads.
 
-Glues ResourceProvisionService (counts) + DevicePool (devices) + an
-ElasticTrainer (ST job) + a ServingPool (WS replicas). The provisioning
-rules are the same objects the simulator uses — this is Phoenix Cloud's
-layered architecture with the cluster replaced by a JAX device pool:
+Glues the provision service (counts) + DevicePool (devices) + elastic
+trainers (batch departments) + serving pools (latency departments). The
+provisioning rules are the same objects the simulator uses — this is
+Phoenix Cloud's layered architecture with the cluster replaced by a JAX
+device pool:
 
   WS load rises  -> autoscaler wants more replicas -> provision service
-  grants free devices or FORCES the trainer to shrink (checkpoint-resize);
-  WS load falls  -> replicas released -> all idle devices flow back to the
-  trainer, which grows at the next step boundary.
+  grants free devices or FORCES a trainer to shrink (checkpoint-resize);
+  WS load falls  -> replicas released -> idle devices flow back to the
+  trainers per the cooperative policy, growing them at the next step
+  boundary.
+
+``PhoenixOrchestrator`` is the paper's two-department wiring (one trainer +
+one serving pool over ``ResourceProvisionService``); ``MultiTenant
+Orchestrator`` runs any department mix over ``TenantProvisionService`` with
+a pluggable cooperative policy — the runtime twin of the N-department
+``ConsolidationSim``.
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, List, Optional
 
-from repro.core.provision import ResourceProvisionService
+from repro.core.provision import (ResourceProvisionService,
+                                  TenantProvisionService)
+from repro.core.types import TenantSpec
 from repro.runtime.device_pool import DevicePool
 from repro.runtime.elastic import ElasticTrainer
 from repro.runtime.serving_pool import ServingPool
 
 
+class _BatchDept:
+    """A batch department: an elastic trainer behind the CMS protocol."""
+
+    def __init__(self, name: str, trainer: ElasticTrainer,
+                 min_devices: int = 0):
+        self.name = name
+        self.trainer = trainer
+        self.min_devices = max(min_devices, trainer.model_size)
+        self.started = False
+
+
+class _LatencyDept:
+    """A latency department: a serving replica pool + optional SLO scaler."""
+
+    def __init__(self, name: str, pool: ServingPool, slo_autoscaler=None):
+        self.name = name
+        self.pool = pool
+        self.slo_autoscaler = slo_autoscaler
+
+
+class MultiTenantOrchestrator:
+    """N departments sharing one JAX device pool under a cooperative policy.
+
+    Register departments before ``start()``: each batch department wraps an
+    ``ElasticTrainer`` (shrinks/grows by whole DP groups so TP collectives
+    stay intact); each latency department wraps a ``ServingPool`` (one
+    device per replica). Then drive latency departments with
+    ``latency_tick``/``latency_tick_slo`` and batch ones with
+    ``train_steps`` — grants, forced reclaims and idle reflows all run
+    through the same ``TenantProvisionService`` the simulator uses.
+    """
+
+    def __init__(self, *, devices=None, policy="paper"):
+        self.devs = DevicePool(devices, groups=())
+        self.svc = TenantProvisionService(self.devs.total, policy=policy)
+        self.batch: Dict[str, _BatchDept] = {}
+        self.latency: Dict[str, _LatencyDept] = {}
+        self.events: List[Dict] = []
+        self._started = False
+
+    # ------------------------------------------------------------ registry
+    def add_batch(self, name: str, trainer: ElasticTrainer, *,
+                  priority: int = 1, weight: float = 1.0,
+                  min_devices: int = 0) -> None:
+        assert not self._started, "register departments before start()"
+        dept = _BatchDept(name, trainer, min_devices)
+        self.batch[name] = dept
+        self.devs.add_group(name)
+        self.svc.register_spec(
+            TenantSpec(name, "batch", priority=priority, weight=weight),
+            on_grant=lambda n, d=dept: self._grant_batch(d, n),
+            on_force_release=lambda n, d=dept: self._force_release_batch(
+                d, n))
+
+    def add_latency(self, name: str, pool: ServingPool, *,
+                    priority: int = 0, weight: float = 1.0,
+                    slo_autoscaler=None) -> None:
+        assert not self._started, "register departments before start()"
+        self.latency[name] = _LatencyDept(name, pool, slo_autoscaler)
+        self.devs.add_group(name)
+        self.svc.register_spec(
+            TenantSpec(name, "latency", priority=priority, weight=weight),
+            on_force_release=lambda n, nm=name: self._force_release_latency(
+                nm, n))
+
+    # ------------------------------------------------------------- wiring
+    def _grant_batch(self, dept: _BatchDept, n: int):
+        self.devs.grant(dept.name, n)
+        devs = self.devs.groups[dept.name]
+        if dept.started:
+            dept.trainer.resize(devs)
+        elif len(devs) >= dept.min_devices and devs:
+            dept.trainer.start(devs)
+            dept.started = True
+        self.events.append({"kind": "grant", "dept": dept.name,
+                            "devices": n})
+
+    def _force_release_batch(self, dept: _BatchDept, n: int) -> int:
+        """Shrink the trainer by n devices, rounded UP to a whole DP group
+        (TP width is preserved) — surplus stays idle and is re-granted."""
+        tp = dept.trainer.model_size
+        have = len(self.devs.groups[dept.name])
+        groups = math.ceil(n / tp)
+        max_groups = (have - dept.min_devices) // tp
+        groups = min(groups, max_groups)
+        take = groups * tp
+        if take <= 0:
+            return 0
+        self.devs.reclaim(dept.name, take)
+        if dept.started and self.devs.groups[dept.name]:
+            dept.trainer.resize(self.devs.groups[dept.name])
+        self.events.append({"kind": "shrink", "dept": dept.name,
+                            "devices": take, "step": dept.trainer.step})
+        return take
+
+    def _force_release_latency(self, name: str, n: int) -> int:
+        """A higher-priority claim takes n replicas from this department."""
+        dept = self.latency[name]
+        got = len(self.devs.reclaim(name, n))
+        dept.pool.scale_to(self.devs.groups[name])
+        self.events.append({"kind": "preempt", "dept": name, "devices": got})
+        return got
+
+    # ------------------------------------------------------------- control
+    def start(self):
+        """Initial provision: batch demand declared, idle flows per policy."""
+        self._started = True
+        for name, dept in self.batch.items():
+            # declared demand = the trainer's max useful scale (model width
+            # x global batch caps the data-parallel extent); demand-aware
+            # policies split idle between departments from these
+            t = dept.trainer
+            useful = t.model_size * max(1, getattr(t, "global_batch", 1))
+            self.svc.set_demand(name, min(self.devs.total, useful),
+                                provision=False)
+        self.svc.provision_idle()
+
+    def latency_tick(self, name: str, offered_load_tokens: float):
+        """One control interval for a latency department: autoscale replicas
+        to the offered load (paper §III-C utilization rule)."""
+        dept = self.latency[name]
+        self._scale_latency(name,
+                            dept.pool.desired_replicas(offered_load_tokens))
+
+    def latency_tick_slo(self, name: str, rate_rps: float,
+                         mean_service_s: float, scv_service: float = 1.0,
+                         p99_service_s: Optional[float] = None):
+        """One control interval driven by the department's latency SLO."""
+        dept = self.latency[name]
+        assert dept.slo_autoscaler is not None, \
+            f"add_latency({name!r}, ..., slo_autoscaler=...) first"
+        if p99_service_s is None:
+            # gamma-tail estimate from the SCV; using the mean here would
+            # make the predicted percentile systematically optimistic
+            p99_service_s = mean_service_s * (
+                1.0 + 2.33 * math.sqrt(max(scv_service, 0.0)))
+        want = dept.slo_autoscaler.desired_nodes(
+            rate_rps, mean_service_s, scv_service, p99_service_s,
+            current=len(dept.pool.replicas))
+        self._scale_latency(name, want)
+
+    def _scale_latency(self, name: str, want: int):
+        dept = self.latency[name]
+        have = len(dept.pool.replicas)
+        if want > have:
+            got = self.svc.claim(name, want - have)
+            self.devs.grant(name, got)
+        elif want < have:
+            give = have - want
+            self.devs.reclaim(name, give)
+            self.svc.release(name, give)
+        dept.pool.scale_to(self.devs.groups[name])
+        self.events.append({"kind": "scale", "dept": name,
+                            "replicas": len(dept.pool.replicas)})
+
+    def train_steps(self, name: str, n: int) -> Dict:
+        return self.batch[name].trainer.train_steps(n)
+
+
 class PhoenixOrchestrator:
+    """The paper's two-department wiring: one ST trainer + one WS pool."""
+
     def __init__(self, trainer: ElasticTrainer, pool: ServingPool, *,
                  devices=None, min_st_devices: int = 0,
                  slo_autoscaler=None):

@@ -165,9 +165,11 @@ def flash_crowd_arrivals(base_rate: float, horizon: float, seed: int = 0,
     """
     rng = np.random.default_rng(seed + 7)
     base = diurnal_arrivals(base_rate, horizon, seed, peak_ratio=3.0)
-    starts = np.sort(rng.uniform(0.1 * horizon,
-                                 0.9 * horizon - spike_duration_s,
-                                 n_spikes))
+    lo = 0.1 * horizon
+    # short horizons: numpy draws from an inverted interval without error,
+    # which would place spikes before t=0 — clamp so lo <= hi always
+    hi = max(lo, 0.9 * horizon - spike_duration_s)
+    starts = np.sort(rng.uniform(lo, hi, n_spikes))
     extra: List[np.ndarray] = []
     for s0 in starts:
         n = rng.poisson(base_rate * (spike_ratio - 1.0) * spike_duration_s)

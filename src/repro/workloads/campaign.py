@@ -1,18 +1,23 @@
 """Vectorized scenario campaign runner.
 
-Sweeps (policy x arrival process x cluster size x SLO) grids over the
-request-level consolidation simulator: each cell runs the full Phoenix
+Sweeps (policy x department-mix x arrival process x cluster size x SLO)
+grids over the consolidation simulator: each cell runs the full Phoenix
 pipeline — arrival trace -> SLO autoscaler -> ConsolidationSim under the
-cooperative policies -> realized request latency — then per-cell metric
-vectors are stacked into numpy arrays for batched reduction (marginal means
-over every axis). One JSON artifact comes out, consumed by
-``benchmarks/paper_figs.py`` and CI's smoke campaign.
+chosen cooperative policy and department mix -> realized request latency —
+then per-cell metric vectors are stacked into numpy arrays for batched
+reduction (marginal means over every axis). One JSON artifact comes out,
+consumed by ``benchmarks/paper_figs.py`` and CI's smoke campaigns.
 
     PYTHONPATH=src python -m repro.workloads.campaign --grid tiny \
         --out campaign.json --workers 2
+    PYTHONPATH=src python -m repro.workloads.campaign --grid mix_tiny
 
-Cells are independent; ``--workers N`` fans them out over processes
-(fork), falling back to in-process execution if a pool cannot start.
+Department mixes (``--grid mix*``): ``paper2`` is the paper's 1 HPC + 1 WS
+wiring (the degenerate case); ``2hpc2ws`` consolidates 2 HPC + 2
+request-level WS departments; ``2hpc2ws1be`` adds a best-effort batch
+tenant. Cells are independent; ``--workers N`` fans them out over
+processes (fork), falling back to in-process execution if a pool cannot
+start.
 """
 from __future__ import annotations
 
@@ -21,16 +26,25 @@ import dataclasses
 import json
 import sys
 import time
+from concurrent.futures.process import BrokenProcessPool
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.policies import POLICIES
 from repro.core.simulator import ConsolidationSim
 from repro.core.traces import synthetic_sdsc_blue
-from repro.core.types import SimConfig, SLOConfig
+from repro.core.types import SimConfig, SLOConfig, TenantSpec
 from repro.serving.batching import ServiceTimeModel
 from repro.workloads.arrivals import GENERATORS, make_trace
 from repro.workloads.autoscaler import RequestWorkload
+
+# department mixes: name -> (n_hpc, n_ws, n_best_effort)
+MIXES: Dict[str, tuple] = {
+    "paper2": (1, 1, 0),        # the paper's wiring (degenerate 2-tenant)
+    "2hpc2ws": (2, 2, 0),
+    "2hpc2ws1be": (2, 2, 1),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,16 +55,21 @@ class ScenarioCell:
     arrival: str                 # key into workloads.arrivals.GENERATORS
     total_nodes: int
     slo_target_s: float
-    rate_rps: float = 2.0        # mean WS arrival rate
+    rate_rps: float = 2.0        # mean WS arrival rate (split across WS depts)
     horizon_s: float = 7200.0
-    n_jobs: int = 80
+    n_jobs: int = 80             # total HPC jobs (split across HPC depts)
     st_max_nodes: int = 32       # batch-trace size calibration
+    policy: str = "paper"        # key into core.policies.POLICIES
+    mix: str = "paper2"          # key into MIXES
     seed: int = 0
 
     def cell_id(self) -> str:
-        return (f"{self.preempt}-{self.scheduler}-{self.arrival}"
+        base = (f"{self.preempt}-{self.scheduler}-{self.arrival}"
                 f"-n{self.total_nodes}-slo{self.slo_target_s:g}"
                 f"-s{self.seed}")
+        if self.policy != "paper" or self.mix != "paper2":
+            base += f"-{self.policy}-{self.mix}"
+        return base
 
 
 # metric columns extracted per cell, in a fixed order so the reduction is
@@ -61,11 +80,12 @@ METRIC_KEYS = ("completed", "killed", "preemptions", "avg_turnaround_s",
                "st_avg_alloc", "ws_avg_alloc", "wall_s")
 # axes a reduction marginalizes over
 AXIS_KEYS = ("preempt", "scheduler", "arrival", "total_nodes",
-             "slo_target_s")
+             "slo_target_s", "policy", "mix")
 
 
 def make_grid(name: str, seed: int = 0) -> List[ScenarioCell]:
-    """Named grids. `tiny` is the CI smoke grid (8 cells, < 60 s serial)."""
+    """Named grids. `tiny` is the CI smoke grid (8 cells, < 60 s serial);
+    `mix_tiny` smokes the policy x department-mix matrix."""
     if name == "tiny":
         return [ScenarioCell(preempt=p, scheduler="first_fit", arrival=a,
                              total_nodes=n, slo_target_s=30.0, seed=seed)
@@ -80,16 +100,67 @@ def make_grid(name: str, seed: int = 0) -> List[ScenarioCell]:
                 for a in ("poisson", "mmpp", "flash_crowd")
                 for n in (48, 64)
                 for slo in (30.0,)]
+    if name == "mix_tiny":
+        return [ScenarioCell(preempt="kill", scheduler="first_fit",
+                             arrival="poisson", total_nodes=96,
+                             slo_target_s=30.0, policy=pol, mix="2hpc2ws",
+                             seed=seed)
+                for pol in sorted(POLICIES)]
+    if name == "mix":
+        return [ScenarioCell(preempt=p, scheduler="first_fit",
+                             arrival="flash_crowd", total_nodes=n,
+                             slo_target_s=30.0, policy=pol, mix=m, seed=seed)
+                for p in ("kill", "checkpoint")
+                for pol in sorted(POLICIES)
+                for m in ("2hpc2ws", "2hpc2ws1be")
+                for n in (96, 128)]
     if name == "full":
         return [ScenarioCell(preempt=p, scheduler=s, arrival=a,
                              total_nodes=n, slo_target_s=slo,
-                             horizon_s=14400.0, n_jobs=160, seed=seed)
+                             horizon_s=14400.0, n_jobs=160, policy=pol,
+                             mix=m, seed=seed)
                 for p in ("kill", "checkpoint")
                 for s in ("first_fit", "fcfs", "easy_backfill")
                 for a in sorted(GENERATORS)
                 for n in (40, 48, 64, 96)
-                for slo in (20.0, 30.0, 60.0)]
-    raise ValueError(f"unknown grid {name!r}; have tiny/small/full")
+                for slo in (20.0, 30.0, 60.0)
+                for pol in sorted(POLICIES)
+                for m in sorted(MIXES)]
+    raise ValueError(f"unknown grid {name!r}; "
+                     f"have tiny/small/mix_tiny/mix/full")
+
+
+def make_tenants(cell: ScenarioCell) -> List[TenantSpec]:
+    """Build the department mix for one cell: HPC departments split the job
+    trace, WS departments split the request rate, an optional best-effort
+    batch tenant rides at the lowest priority."""
+    n_hpc, n_ws, n_be = MIXES[cell.mix]
+    specs: List[TenantSpec] = []
+    for i in range(n_ws):
+        trace = make_trace(cell.arrival, cell.rate_rps / n_ws,
+                           cell.horizon_s, cell.seed + 101 * i)
+        specs.append(TenantSpec(
+            f"ws-{i}", "latency", priority=i,
+            slo=SLOConfig(latency_target_s=cell.slo_target_s),
+            demand=RequestWorkload(
+                trace=trace, model=ServiceTimeModel(),
+                slo=SLOConfig(latency_target_s=cell.slo_target_s))))
+    for i in range(n_hpc):
+        jobs = synthetic_sdsc_blue(seed=cell.seed + 31 * i,
+                                   n_jobs=max(1, cell.n_jobs // n_hpc),
+                                   horizon=cell.horizon_s,
+                                   max_nodes=cell.st_max_nodes)
+        specs.append(TenantSpec(
+            f"hpc-{i}", "batch", priority=n_ws + i,
+            weight=float(n_hpc - i), jobs=jobs))
+    for i in range(n_be):
+        jobs = synthetic_sdsc_blue(seed=cell.seed + 997 + i,
+                                   n_jobs=max(1, cell.n_jobs // 4),
+                                   horizon=cell.horizon_s,
+                                   max_nodes=max(4, cell.st_max_nodes // 4))
+        specs.append(TenantSpec(
+            f"be-{i}", "batch", priority=100 + i, weight=0.5, jobs=jobs))
+    return specs
 
 
 def run_cell(cell: ScenarioCell) -> Dict:
@@ -98,18 +169,39 @@ def run_cell(cell: ScenarioCell) -> Dict:
     cfg = SimConfig(total_nodes=cell.total_nodes,
                     preempt_mode=cell.preempt,
                     scheduler=cell.scheduler, seed=cell.seed)
-    jobs = synthetic_sdsc_blue(seed=cell.seed, n_jobs=cell.n_jobs,
-                               horizon=cell.horizon_s,
-                               max_nodes=cell.st_max_nodes)
-    trace = make_trace(cell.arrival, cell.rate_rps, cell.horizon_s,
-                       cell.seed)
-    workload = RequestWorkload(
-        trace=trace, model=ServiceTimeModel(),
-        slo=SLOConfig(latency_target_s=cell.slo_target_s))
-    sim = ConsolidationSim(cfg, jobs, workload, horizon=cell.horizon_s)
+    if cell.mix == "paper2" and cell.policy == "paper":
+        # the degenerate 2-tenant path (bit-identical to the seed pipeline)
+        jobs = synthetic_sdsc_blue(seed=cell.seed, n_jobs=cell.n_jobs,
+                                   horizon=cell.horizon_s,
+                                   max_nodes=cell.st_max_nodes)
+        trace = make_trace(cell.arrival, cell.rate_rps, cell.horizon_s,
+                           cell.seed)
+        workload = RequestWorkload(
+            trace=trace, model=ServiceTimeModel(),
+            slo=SLOConfig(latency_target_s=cell.slo_target_s))
+        sim = ConsolidationSim(cfg, jobs, workload, horizon=cell.horizon_s)
+        ws_requests = len(trace)
+        peak = max((n for _, n in workload.demand_events(cell.horizon_s)),
+                   default=0)
+    else:
+        tenants = make_tenants(cell)
+        sim = ConsolidationSim(cfg, horizon=cell.horizon_s, tenants=tenants,
+                               policy=cell.policy)
+        ws_requests = sum(len(s.demand.trace) for s in tenants
+                          if s.kind == "latency")
+        peak = sum(max((n for _, n in s.demand.demand_events(cell.horizon_s)),
+                       default=0)
+                   for s in tenants if s.kind == "latency")
     res = sim.run()
-    lat = res.ws_latency or {}
-    planned = workload.demand_events(cell.horizon_s)
+
+    latency_res = [t for t in res.tenants.values() if t.kind == "latency"]
+    lats = [t.latency or {} for t in latency_res]
+    slo_met = all(bool(lat.get("slo_met", False)) for lat in lats) \
+        if lats else False
+
+    def worst(key):     # headline latency metrics are worst-department
+        return max((float(lat.get(key, 0.0)) for lat in lats), default=0.0)
+
     out = {k: getattr(cell, k) for k in AXIS_KEYS}
     out["cell_id"] = cell.cell_id()
     out["seed"] = cell.seed
@@ -118,19 +210,23 @@ def run_cell(cell: ScenarioCell) -> Dict:
         "killed": res.killed,
         "preemptions": res.preemptions,
         "avg_turnaround_s": res.avg_turnaround,
-        "ws_p50_s": lat.get("p50_s", 0.0),
-        "ws_p95_s": lat.get("p95_s", 0.0),
-        "ws_p99_s": lat.get("p99_s", 0.0),
-        "ws_violation_rate": lat.get("violation_rate", 0.0),
-        "ws_unserved": lat.get("unserved", 0),
+        "ws_p50_s": worst("p50_s"),
+        "ws_p95_s": worst("p95_s"),
+        "ws_p99_s": worst("p99_s"),
+        "ws_violation_rate": worst("violation_rate"),
+        "ws_unserved": sum(int(lat.get("unserved", 0)) for lat in lats),
         "ws_unmet_node_seconds": res.ws_unmet_node_seconds,
-        "ws_peak_nodes": max((n for _, n in planned), default=0),
+        "ws_peak_nodes": peak,
         "st_avg_alloc": res.st_avg_alloc,
         "ws_avg_alloc": res.ws_avg_alloc,
         "wall_s": time.time() - t0,
     }
-    out["ws_requests"] = len(trace)
-    out["slo_met"] = bool(lat.get("slo_met", False))
+    out["ws_requests"] = ws_requests
+    out["slo_met"] = slo_met
+    out["tenant_metrics"] = {
+        name: {"kind": t.kind, "priority": t.priority,
+               "avg_alloc": t.avg_alloc, **t.benefit}
+        for name, t in res.tenants.items()}
     return out
 
 
@@ -140,7 +236,8 @@ def _run_cells(cells: Sequence[ScenarioCell], workers: int) -> List[Dict]:
             from concurrent.futures import ProcessPoolExecutor
             with ProcessPoolExecutor(max_workers=workers) as pool:
                 return list(pool.map(run_cell, cells))
-        except (OSError, ImportError) as e:   # no fork / restricted env
+        except (OSError, ImportError, BrokenProcessPool) as e:
+            # no fork / restricted env / workers died on first submission
             print(f"[campaign] process pool unavailable ({e!r}); "
                   f"running serial", file=sys.stderr)
     return [run_cell(c) for c in cells]
@@ -183,7 +280,7 @@ def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
     t0 = time.time()
     results = _run_cells(cells, workers)
     artifact = {
-        "schema": "phoenix-campaign-v1",
+        "schema": "phoenix-campaign-v2",
         "grid": grid_name,
         "n_cells": len(results),
         "workers": workers,
@@ -201,7 +298,7 @@ def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--grid", default="tiny",
-                    choices=["tiny", "small", "full"])
+                    choices=["tiny", "small", "mix_tiny", "mix", "full"])
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="campaign.json")

@@ -94,15 +94,18 @@ def simulate_queue(trace: RequestTrace,
     lat = np.empty(n)
     wait = np.empty(n)
     unserved = 0
-    ci = 0                          # capacity step pointer (monotone: FIFO
-    nc = len(cap_t)                 # start times are non-decreasing)
+    nc = len(cap_t)
+    prev_start = 0.0                # FIFO discipline: a request never starts
+    #                                 before the one queued ahead of it
 
     for i in range(n):
         t0 = float(trace.t[i])
-        start = t0
+        start = max(t0, prev_start)
         while True:
-            while ci + 1 < nc and cap_t[ci + 1] <= start:
-                ci += 1
+            # capacity level AT `start` (looked up per request — a global
+            # monotone pointer would apply a later capacity step to this
+            # request whenever an earlier one blocked past it)
+            ci = int(np.searchsorted(cap_t, start, side="right")) - 1
             k = int(cap_k[ci])
             while busy and busy[0] <= start:
                 heapq.heappop(busy)
@@ -130,6 +133,7 @@ def simulate_queue(trace: RequestTrace,
             lat[i] = np.inf
             wait[i] = np.inf
             continue
+        prev_start = start
         fin = start + float(svc[i])
         heapq.heappush(busy, fin)
         wait[i] = start - t0
