@@ -137,14 +137,114 @@ def campaign_tiny(out_path: str = "BENCH_campaign.json"
                        grid_name="tiny")
     us = (time.time() - t0) * 1e6
     ov = art["reductions"]["overall"]
+    tp = art["throughput"]
     return us, {
         "n_cells": art["n_cells"],
         "wall_s": round(art["wall_s"], 2),
+        "cells_per_s": round(tp["cells_per_s"], 2),
+        "queue_requests_per_s": round(tp["queue_requests_per_s"]),
         "slo_met_rate": ov["slo_met_rate"],
         "mean_ws_p99_s": round(ov["ws_p99_s"], 2),
         "mean_violation_rate": round(ov["ws_violation_rate"], 5),
         "mean_completed": ov["completed"],
+        "inf_rate": ov["inf_rate"],
         "artifact": out_path,
+    }
+
+
+def campaign_throughput() -> Tuple[float, Dict]:
+    """Perf-regression bench for the queueing core + campaign pipeline.
+
+    Workload set = the exact (trace, capacity-events) pairs the `small`
+    campaign grid feeds ``simulate_queue``: the realized WS allocation of
+    every cell (replayed from the consolidation sim) plus each unique
+    trace's planned (autoscaler-granted) capacity. The pre-vectorization
+    reference loop and the new dispatch run the identical set, interleaved
+    min-of-3; ``speedup_x`` is the hot-path speedup the tentpole claims.
+    Also reports the jax scan/vmap batched core on constant-capacity
+    (dedicated-nodes) sweeps and end-to-end cells/sec for the small grid.
+    """
+    from repro.core.simulator import ConsolidationSim
+    from repro.core.traces import synthetic_sdsc_blue
+    from repro.core.types import SLOConfig
+    from repro.serving.batching import ServiceTimeModel
+    from repro.workloads import (RequestWorkload, make_trace,
+                                 simulate_queue, simulate_queue_many)
+    from repro.workloads.campaign import make_grid, run_campaign
+
+    t0 = time.time()
+    model = ServiceTimeModel()
+    cells = make_grid("small")
+    work = []                        # (trace, capacity_events, slo, horizon)
+    planned_done = set()
+    for cell in cells:
+        slo = SLOConfig(latency_target_s=cell.slo_target_s)
+        trace = make_trace(cell.arrival, cell.rate_rps, cell.horizon_s,
+                           cell.seed)
+        wl = RequestWorkload(trace=trace, model=model, slo=slo)
+        jobs = synthetic_sdsc_blue(seed=cell.seed, n_jobs=cell.n_jobs,
+                                   horizon=cell.horizon_s,
+                                   max_nodes=cell.st_max_nodes)
+        sim = ConsolidationSim(
+            SimConfig(total_nodes=cell.total_nodes,
+                      preempt_mode=cell.preempt, scheduler=cell.scheduler,
+                      seed=cell.seed),
+            jobs, wl, horizon=cell.horizon_s)
+        sim.run()
+        work.append((trace, list(sim.ws.alloc_events), slo, cell.horizon_s))
+        pk = (cell.arrival, cell.slo_target_s, cell.rate_rps,
+              cell.horizon_s, cell.seed)
+        if pk not in planned_done:
+            planned_done.add(pk)
+            work.append((trace, wl.demand_events(cell.horizon_s), slo,
+                         cell.horizon_s))
+    n_req = sum(len(tr) for tr, _, _, _ in work)
+
+    def sweep(impl: str) -> float:
+        s = time.perf_counter()
+        for tr, ev, slo, hz in work:
+            simulate_queue(tr, ev, model, slo, horizon=hz, impl=impl)
+        return time.perf_counter() - s
+
+    ref_s = new_s = float("inf")
+    for _ in range(3):
+        ref_s = min(ref_s, sweep("reference"))
+        new_s = min(new_s, sweep("auto"))
+
+    # batched constant-capacity core (one jax scan/vmap call over all
+    # dedicated-nodes baselines; numpy fallback when jax is unavailable)
+    ded = {}
+    for tr, _, _, _ in work:
+        ded[(tr.kind, len(tr))] = tr
+    mtraces, mcaps = [], []
+    for tr in ded.values():
+        for nodes in (8, 12, 16):
+            mtraces.append(tr)
+            mcaps.append([(0.0, nodes)])
+    slo30 = SLOConfig(latency_target_s=30.0)
+    s = time.perf_counter()
+    simulate_queue_many(mtraces, mcaps, model, slo30, horizon=7200.0)
+    compile_s = time.perf_counter() - s
+    s = time.perf_counter()
+    simulate_queue_many(mtraces, mcaps, model, slo30, horizon=7200.0)
+    batched_s = time.perf_counter() - s
+    batched_req = sum(len(tr) for tr in mtraces)
+
+    # end-to-end cells/sec through the full new pipeline
+    art = run_campaign(cells, workers=1, grid_name="small")
+    tp = art["throughput"]
+
+    us = (time.time() - t0) * 1e6
+    return us, {
+        "queue_workloads": len(work),
+        "queue_requests": n_req,
+        "ref_requests_per_s": round(n_req / ref_s),
+        "new_requests_per_s": round(n_req / new_s),
+        "speedup_x": round(ref_s / new_s, 2),
+        "batched_requests_per_s": round(batched_req / batched_s),
+        "batched_compile_s": round(compile_s, 2),
+        "small_cells_per_s": round(tp["cells_per_s"], 2),
+        "small_queue_requests_per_s": round(tp["queue_requests_per_s"]),
     }
 
 

@@ -37,6 +37,7 @@ def main() -> None:
         ("request_level_slo", paper_figs.request_level_slo),
         ("multi_department", paper_figs.multi_department),
         ("campaign_tiny", paper_figs.campaign_tiny),
+        ("campaign_throughput", paper_figs.campaign_throughput),
         ("kernel_flash_attention", kernel_bench.bench_flash_attention),
         ("kernel_decode_attention", kernel_bench.bench_decode_attention),
         ("kernel_rglru_scan", kernel_bench.bench_rglru_scan),

@@ -11,12 +11,14 @@ from repro.workloads.arrivals import (GENERATORS, RequestTrace,
 from repro.workloads.autoscaler import RequestWorkload, SLOAutoscaler
 from repro.workloads.queueing import (QueueMetrics, capacity_steps,
                                       predicted_percentile_latency,
-                                      sakasegawa_wait, simulate_queue)
+                                      sakasegawa_wait, simulate_queue,
+                                      simulate_queue_many,
+                                      simulate_queue_reference)
 
 __all__ = [
     "GENERATORS", "RequestTrace", "burstiness_index", "diurnal_arrivals",
     "flash_crowd_arrivals", "make_trace", "mmpp_arrivals",
     "poisson_arrivals", "RequestWorkload", "SLOAutoscaler", "QueueMetrics",
     "capacity_steps", "predicted_percentile_latency", "sakasegawa_wait",
-    "simulate_queue",
+    "simulate_queue", "simulate_queue_many", "simulate_queue_reference",
 ]

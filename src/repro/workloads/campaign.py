@@ -1,4 +1,4 @@
-"""Vectorized scenario campaign runner.
+"""Vectorized, sharded, resumable scenario campaign runner.
 
 Sweeps (policy x department-mix x arrival process x cluster size x SLO)
 grids over the consolidation simulator: each cell runs the full Phoenix
@@ -12,6 +12,18 @@ consumed by ``benchmarks/paper_figs.py`` and CI's smoke campaigns.
         --out campaign.json --workers 2
     PYTHONPATH=src python -m repro.workloads.campaign --grid mix_tiny
 
+Sharded / resumable execution for the big grids (``full`` is ~4k cells):
+every finished cell is streamed as one JSON line to a *spool* file, keyed
+by a content hash of the entire ``ScenarioCell``; ``--resume`` skips cells
+already spooled and the ``merge`` subcommand folds shard spools into the
+final artifact (reductions are recomputed from the spooled rows, never
+from in-memory state, so a merge of N shards is bit-identical to a
+single-shot run):
+
+    campaign --grid full --shard 0/8 --spool s0.jsonl   # one per host
+    campaign --grid full --shard 1/8 --spool s1.jsonl --resume
+    campaign merge --grid full --out full.json s*.jsonl
+
 Department mixes (``--grid mix*``): ``paper2`` is the paper's 1 HPC + 1 WS
 wiring (the degenerate case); ``2hpc2ws`` consolidates 2 HPC + 2
 request-level WS departments; ``2hpc2ws1be`` adds a best-effort batch
@@ -23,11 +35,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import json
+import os
 import sys
 import time
 from concurrent.futures.process import BrokenProcessPool
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -38,6 +52,9 @@ from repro.core.types import SimConfig, SLOConfig, TenantSpec
 from repro.serving.batching import ServiceTimeModel
 from repro.workloads.arrivals import GENERATORS, make_trace
 from repro.workloads.autoscaler import RequestWorkload
+from repro.workloads.queueing import counters_delta, snapshot_counters
+
+SCHEMA = "phoenix-campaign-v3"
 
 # department mixes: name -> (n_hpc, n_ws, n_best_effort)
 MIXES: Dict[str, tuple] = {
@@ -64,12 +81,28 @@ class ScenarioCell:
     seed: int = 0
 
     def cell_id(self) -> str:
+        """Human-readable id. Non-default load knobs are appended so custom
+        grids varying them don't collide (the spool/resume key is the full
+        content hash from ``cell_key`` regardless)."""
         base = (f"{self.preempt}-{self.scheduler}-{self.arrival}"
                 f"-n{self.total_nodes}-slo{self.slo_target_s:g}"
                 f"-s{self.seed}")
         if self.policy != "paper" or self.mix != "paper2":
             base += f"-{self.policy}-{self.mix}"
+        defaults = {f.name: f.default for f in dataclasses.fields(self)}
+        extra = [(tag, getattr(self, name))
+                 for tag, name in (("r", "rate_rps"), ("h", "horizon_s"),
+                                   ("j", "n_jobs"), ("x", "st_max_nodes"))
+                 if getattr(self, name) != defaults[name]]
+        if extra:
+            base += "".join(f"-{tag}{v:g}" if isinstance(v, float)
+                            else f"-{tag}{v}" for tag, v in extra)
         return base
+
+    def cell_key(self) -> str:
+        """Content hash of every field — the spool/resume/cache key."""
+        blob = json.dumps(dataclasses.asdict(self), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
 # metric columns extracted per cell, in a fixed order so the reduction is
@@ -77,7 +110,12 @@ class ScenarioCell:
 METRIC_KEYS = ("completed", "killed", "preemptions", "avg_turnaround_s",
                "ws_p50_s", "ws_p95_s", "ws_p99_s", "ws_violation_rate",
                "ws_unserved", "ws_unmet_node_seconds", "ws_peak_nodes",
-               "st_avg_alloc", "ws_avg_alloc", "wall_s")
+               "st_avg_alloc", "ws_avg_alloc", "queue_sim_s", "wall_s")
+# the subset reductions marginalize over: deterministic simulation outcomes
+# only, so a merge of shard spools is bit-identical to a single-shot run
+# (timing lives per-cell and in the artifact's `throughput` section)
+REDUCE_KEYS = tuple(k for k in METRIC_KEYS
+                    if k not in ("queue_sim_s", "wall_s"))
 # axes a reduction marginalizes over
 AXIS_KEYS = ("preempt", "scheduler", "arrival", "total_nodes",
              "slo_target_s", "policy", "mix")
@@ -130,6 +168,23 @@ def make_grid(name: str, seed: int = 0) -> List[ScenarioCell]:
                      f"have tiny/small/mix_tiny/mix/full")
 
 
+def shard_cells(cells: Sequence[ScenarioCell],
+                shard: Optional[str]) -> List[ScenarioCell]:
+    """Deterministic round-robin partition: ``--shard i/N`` keeps cells at
+    grid index i, i+N, i+2N, ... so every shard sees a representative slice
+    of the axes (not a contiguous block of one policy)."""
+    if not shard:
+        return list(cells)
+    try:
+        idx_s, n_s = shard.split("/")
+        idx, n = int(idx_s), int(n_s)
+    except ValueError as e:
+        raise ValueError(f"bad --shard {shard!r}; expected i/N") from e
+    if not (n >= 1 and 0 <= idx < n):
+        raise ValueError(f"bad --shard {shard!r}; need 0 <= i < N")
+    return [c for j, c in enumerate(cells) if j % n == idx]
+
+
 def make_tenants(cell: ScenarioCell) -> List[TenantSpec]:
     """Build the department mix for one cell: HPC departments split the job
     trace, WS departments split the request rate, an optional best-effort
@@ -166,6 +221,7 @@ def make_tenants(cell: ScenarioCell) -> List[TenantSpec]:
 def run_cell(cell: ScenarioCell) -> Dict:
     """Run one scenario end-to-end; returns axes + metrics as a flat dict."""
     t0 = time.time()
+    q0 = snapshot_counters()
     cfg = SimConfig(total_nodes=cell.total_nodes,
                     preempt_mode=cell.preempt,
                     scheduler=cell.scheduler, seed=cell.seed)
@@ -202,8 +258,10 @@ def run_cell(cell: ScenarioCell) -> Dict:
     def worst(key):     # headline latency metrics are worst-department
         return max((float(lat.get(key, 0.0)) for lat in lats), default=0.0)
 
+    qd = counters_delta(q0)
     out = {k: getattr(cell, k) for k in AXIS_KEYS}
     out["cell_id"] = cell.cell_id()
+    out["cell_key"] = cell.cell_key()
     out["seed"] = cell.seed
     out["metrics"] = {
         "completed": res.completed,
@@ -219,10 +277,14 @@ def run_cell(cell: ScenarioCell) -> Dict:
         "ws_peak_nodes": peak,
         "st_avg_alloc": res.st_avg_alloc,
         "ws_avg_alloc": res.ws_avg_alloc,
+        "queue_sim_s": qd["seconds"],
         "wall_s": time.time() - t0,
     }
     out["ws_requests"] = ws_requests
     out["slo_met"] = slo_met
+    out["queue_sim"] = {"calls": int(qd["calls"]),
+                        "requests": int(qd["requests"]),
+                        "seconds": qd["seconds"]}
     out["tenant_metrics"] = {
         name: {"kind": t.kind, "priority": t.priority,
                "avg_alloc": t.avg_alloc, **t.benefit}
@@ -230,37 +292,71 @@ def run_cell(cell: ScenarioCell) -> Dict:
     return out
 
 
-def _run_cells(cells: Sequence[ScenarioCell], workers: int) -> List[Dict]:
-    if workers > 1 and len(cells) > 1:
-        try:
-            from concurrent.futures import ProcessPoolExecutor
-            with ProcessPoolExecutor(max_workers=workers) as pool:
-                return list(pool.map(run_cell, cells))
-        except (OSError, ImportError, BrokenProcessPool) as e:
-            # no fork / restricted env / workers died on first submission
-            print(f"[campaign] process pool unavailable ({e!r}); "
-                  f"running serial", file=sys.stderr)
-    return [run_cell(c) for c in cells]
+# ------------------------------------------------------------- spooling
+
+
+def spool_append(path: str, row: Dict) -> None:
+    """Append one finished cell to the JSONL spool (crash-durable: each
+    line is self-contained and keyed by the cell's content hash)."""
+    with open(path, "a") as f:
+        f.write(json.dumps(row, default=float) + "\n")
+        f.flush()
+
+
+def spool_load(path: str) -> Dict[str, Dict]:
+    """Load spooled rows keyed by cell_key; later duplicates win, truncated
+    trailing lines (killed mid-write) are skipped."""
+    rows: Dict[str, Dict] = {}
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError:
+                continue                        # torn write at kill time
+            key = row.get("cell_key")
+            if key:
+                rows[key] = row
+    return rows
+
+
+# ------------------------------------------------------------ reduction
 
 
 def reduce_metrics(results: List[Dict]) -> Dict:
     """Numpy-batched reduction: stack all cells, marginalize per axis.
 
-    Returns {"overall": {...}, "by_<axis>": {level: {...}}} with mean of
-    every metric column — the campaign's answer to "which policy holds the
-    SLO as the cluster shrinks" without re-reading per-cell rows.
+    Returns {"overall": {...}, "by_<axis>": {level: {...}}} with the
+    finite-masked mean of every metric column — a single cell with
+    unserved requests has inf percentiles, which must not poison every
+    marginal mean containing it — plus an explicit ``inf_rate`` column
+    (fraction of cells with any non-finite metric). Rows are re-ordered by
+    cell_key before stacking so shard merges reduce bit-identically to
+    single-shot runs regardless of completion order.
     """
     if not results:
         return {}
-    mat = np.array([[float(r["metrics"][k]) for k in METRIC_KEYS]
+    results = sorted(results,
+                     key=lambda r: r.get("cell_key", r.get("cell_id", "")))
+    mat = np.array([[float(r["metrics"][k]) for k in REDUCE_KEYS]
                     for r in results])                 # [cells, metrics]
     slo_met = np.array([r["slo_met"] for r in results], dtype=bool)
+    finite = np.isfinite(mat)
 
     def stats(mask: np.ndarray) -> Dict:
         sub = mat[mask]
-        d = {k: float(v) for k, v in zip(METRIC_KEYS, sub.mean(axis=0))}
+        fin = finite[mask]
+        cnt = fin.sum(axis=0)
+        sums = np.where(fin, sub, 0.0).sum(axis=0)
+        means = np.where(cnt > 0, sums / np.maximum(cnt, 1), np.inf)
+        d = {k: float(v) for k, v in zip(REDUCE_KEYS, means)}
         d["cells"] = int(mask.sum())
         d["slo_met_rate"] = float(slo_met[mask].mean())
+        d["inf_rate"] = float((~fin.all(axis=1)).mean())
         return d
 
     red = {"overall": stats(np.ones(len(results), dtype=bool))}
@@ -274,18 +370,99 @@ def reduce_metrics(results: List[Dict]) -> Dict:
     return red
 
 
+def _throughput(rows: Sequence[Dict], executed: int, skipped: int,
+                run_wall: float) -> Dict:
+    """Cells/sec + queue-sim requests/sec over the rows' own accounting
+    (works identically for live runs and spool merges)."""
+    q_req = sum(int(r.get("queue_sim", {}).get("requests", 0)) for r in rows)
+    q_s = sum(float(r.get("queue_sim", {}).get("seconds", 0.0))
+              for r in rows)
+    cell_s = sum(float(r["metrics"].get("wall_s", 0.0)) for r in rows)
+    return {
+        "executed": executed,
+        "skipped": skipped,
+        "run_wall_s": run_wall,
+        "cells_per_s": executed / run_wall if run_wall > 0 else 0.0,
+        "serial_cells_per_s": len(rows) / cell_s if cell_s > 0 else 0.0,
+        "queue_requests": q_req,
+        "queue_sim_s": q_s,
+        "queue_requests_per_s": q_req / q_s if q_s > 0 else 0.0,
+    }
+
+
+# ------------------------------------------------------------ execution
+
+
+def _run_cells_streaming(cells: Sequence[ScenarioCell], workers: int,
+                         spool_path: Optional[str]) -> List[Dict]:
+    """Run cells, appending each finished row to the spool immediately so
+    an interrupted run loses at most the in-flight cells."""
+    rows: List[Dict] = []
+
+    def emit(row: Dict) -> None:
+        rows.append(row)
+        if spool_path:
+            spool_append(spool_path, row)
+
+    if workers > 1 and len(cells) > 1:
+        try:
+            from concurrent.futures import (ProcessPoolExecutor,
+                                            as_completed)
+            with ProcessPoolExecutor(max_workers=workers) as pool:
+                futs = {pool.submit(run_cell, c): c for c in cells}
+                for fut in as_completed(futs):
+                    emit(fut.result())
+            return rows
+        except (OSError, ImportError, BrokenProcessPool) as e:
+            # no fork / restricted env / workers died on first submission
+            print(f"[campaign] process pool unavailable ({e!r}); "
+                  f"running serial", file=sys.stderr)
+            rows = []
+    for c in cells:
+        emit(run_cell(c))
+    return rows
+
+
+def _assemble(rows_by_key: Dict[str, Dict],
+              ordered_keys: Sequence[str]) -> List[Dict]:
+    return [rows_by_key[k] for k in ordered_keys if k in rows_by_key]
+
+
 def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
                  out_path: Optional[str] = None,
-                 grid_name: str = "custom") -> Dict:
+                 grid_name: str = "custom",
+                 spool_path: Optional[str] = None,
+                 resume: bool = False,
+                 shard: Optional[str] = None) -> Dict:
+    """Run (a shard of) a campaign grid, optionally resuming from a spool.
+
+    The artifact's ``cells`` keep the grid order and its ``reductions``
+    are order-independent, so sharded spools merged later reproduce a
+    single-shot artifact's reductions exactly.
+    """
     t0 = time.time()
-    results = _run_cells(cells, workers)
+    cells = shard_cells(cells, shard)
+    keys = [c.cell_key() for c in cells]
+    done: Dict[str, Dict] = {}
+    if resume and spool_path:
+        spooled = spool_load(spool_path)
+        done = {k: spooled[k] for k in keys if k in spooled}
+    todo = [c for c, k in zip(cells, keys) if k not in done]
+    new_rows = _run_cells_streaming(todo, workers, spool_path)
+    by_key = dict(done)
+    by_key.update({r["cell_key"]: r for r in new_rows})
+    results = _assemble(by_key, keys)
+    wall = time.time() - t0
     artifact = {
-        "schema": "phoenix-campaign-v2",
+        "schema": SCHEMA,
         "grid": grid_name,
+        "shard": shard,
         "n_cells": len(results),
         "workers": workers,
-        "wall_s": time.time() - t0,
+        "wall_s": wall,
         "metric_keys": list(METRIC_KEYS),
+        "throughput": _throughput(results, executed=len(new_rows),
+                                  skipped=len(done), run_wall=wall),
         "cells": results,
         "reductions": reduce_metrics(results),
     }
@@ -295,26 +472,126 @@ def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
     return artifact
 
 
-def main(argv=None) -> int:
+def merge_spools(spool_paths: Sequence[str],
+                 grid_cells: Optional[Sequence[ScenarioCell]] = None,
+                 grid_name: str = "merged"
+                 ) -> Tuple[Dict, List[str]]:
+    """Fold shard spools into one artifact; reductions are recomputed from
+    the spooled rows. Returns (artifact, missing_cell_ids): when
+    ``grid_cells`` is given, rows are ordered by the grid and cells absent
+    from every spool are reported (their ids) instead of silently dropped.
+    """
+    by_key: Dict[str, Dict] = {}
+    for p in spool_paths:
+        by_key.update(spool_load(p))
+    missing: List[str] = []
+    if grid_cells is not None:
+        keys = [c.cell_key() for c in grid_cells]
+        missing = [c.cell_id() for c, k in zip(grid_cells, keys)
+                   if k not in by_key]
+        results = _assemble(by_key, keys)
+    else:
+        results = [by_key[k] for k in sorted(by_key)]
+    cell_wall = sum(float(r["metrics"].get("wall_s", 0.0)) for r in results)
+    artifact = {
+        "schema": SCHEMA,
+        "grid": grid_name,
+        "shard": None,
+        "n_cells": len(results),
+        "workers": 0,
+        "wall_s": cell_wall,
+        "metric_keys": list(METRIC_KEYS),
+        "throughput": _throughput(results, executed=len(results), skipped=0,
+                                  run_wall=cell_wall),
+        "cells": results,
+        "reductions": reduce_metrics(results),
+    }
+    return artifact, missing
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def _print_summary(art: Dict, out: str) -> None:
+    ov = art["reductions"].get("overall", {})
+    tp = art.get("throughput", {})
+    print(f"campaign grid={art['grid']} cells={art['n_cells']} "
+          f"wall={art['wall_s']:.1f}s -> {out}")
+    if ov:
+        print(f"  slo_met_rate={ov['slo_met_rate']:.2f}  "
+              f"mean ws_p99={ov['ws_p99_s']:.1f}s  "
+              f"mean violation_rate={ov['ws_violation_rate']:.4f}  "
+              f"mean completed={ov['completed']:.1f}  "
+              f"inf_rate={ov.get('inf_rate', 0.0):.3f}")
+    if tp:
+        print(f"  executed={tp['executed']} skipped={tp['skipped']}  "
+              f"cells/s={tp['cells_per_s']:.2f}  "
+              f"queue req/s={tp['queue_requests_per_s']:.0f}")
+
+
+def _main_run(argv) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--grid", default="tiny",
                     choices=["tiny", "small", "mix_tiny", "mix", "full"])
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="campaign.json")
+    ap.add_argument("--shard", default=None, metavar="i/N",
+                    help="run only cells with grid_index %% N == i")
+    ap.add_argument("--spool", default=None,
+                    help="JSONL spool path (default derived from --out "
+                         "when --shard/--resume is used)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already present in the spool")
     args = ap.parse_args(argv)
+
+    spool = args.spool
+    if spool is None and (args.shard or args.resume):
+        tag = f".shard{args.shard.replace('/', 'of')}" if args.shard else ""
+        spool = f"{args.out}{tag}.spool.jsonl"
 
     cells = make_grid(args.grid, seed=args.seed)
     art = run_campaign(cells, workers=args.workers, out_path=args.out,
-                       grid_name=args.grid)
-    ov = art["reductions"]["overall"]
-    print(f"campaign grid={args.grid} cells={art['n_cells']} "
-          f"wall={art['wall_s']:.1f}s -> {args.out}")
-    print(f"  slo_met_rate={ov['slo_met_rate']:.2f}  "
-          f"mean ws_p99={ov['ws_p99_s']:.1f}s  "
-          f"mean violation_rate={ov['ws_violation_rate']:.4f}  "
-          f"mean completed={ov['completed']:.1f}")
+                       grid_name=args.grid, spool_path=spool,
+                       resume=args.resume, shard=args.shard)
+    _print_summary(art, args.out)
     return 0
+
+
+def _main_merge(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="campaign merge",
+        description="Fold shard spools into one campaign artifact")
+    ap.add_argument("spools", nargs="+", help="JSONL spool files")
+    ap.add_argument("--out", default="campaign.json")
+    ap.add_argument("--grid", default=None,
+                    choices=["tiny", "small", "mix_tiny", "mix", "full"],
+                    help="order/verify rows against this named grid")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--allow-partial", action="store_true",
+                    help="merge even if grid cells are missing")
+    args = ap.parse_args(argv)
+
+    grid_cells = make_grid(args.grid, seed=args.seed) if args.grid else None
+    art, missing = merge_spools(args.spools, grid_cells=grid_cells,
+                                grid_name=args.grid or "merged")
+    if missing:
+        print(f"[merge] {len(missing)} grid cells missing from spools: "
+              + ", ".join(missing[:5])
+              + (" ..." if len(missing) > 5 else ""), file=sys.stderr)
+        if not args.allow_partial:
+            return 2
+    with open(args.out, "w") as f:
+        json.dump(art, f, indent=1, default=float)
+    _print_summary(art, args.out)
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "merge":
+        return _main_merge(argv[1:])
+    return _main_run(argv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,189 @@
+"""Sharded / resumable campaign execution: cell keys, spools, merge.
+
+The acceptance bar: --shard 0/2 + --shard 1/2 + merge must reproduce the
+single-shot artifact's reductions *exactly*, and --resume must re-execute
+only the missing cells.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.workloads.campaign import (REDUCE_KEYS, ScenarioCell, make_grid,
+                                      merge_spools, reduce_metrics,
+                                      run_campaign, shard_cells,
+                                      spool_append, spool_load)
+
+# a fast 4-cell grid (short horizon) for end-to-end runs
+FAST_CELLS = [
+    ScenarioCell(preempt=p, scheduler="first_fit", arrival=a,
+                 total_nodes=48, slo_target_s=30.0, horizon_s=1800.0,
+                 n_jobs=20, rate_rps=1.0)
+    for p in ("kill", "checkpoint")
+    for a in ("poisson", "flash_crowd")
+]
+
+
+# ------------------------------------------------------------- cell keys
+
+
+def test_cell_key_covers_all_fields():
+    """Regression: rate_rps / horizon_s / n_jobs / st_max_nodes were not in
+    cell_id, so custom grids varying them collided — the spool key must
+    hash every field."""
+    base = ScenarioCell(preempt="kill", scheduler="first_fit",
+                        arrival="poisson", total_nodes=48,
+                        slo_target_s=30.0)
+    for field in ("rate_rps", "horizon_s", "n_jobs", "st_max_nodes",
+                  "preempt", "arrival", "total_nodes", "slo_target_s",
+                  "policy", "mix", "seed"):
+        bumped = {"rate_rps": 3.5, "horizon_s": 999.0, "n_jobs": 7,
+                  "st_max_nodes": 5, "preempt": "checkpoint",
+                  "arrival": "mmpp", "total_nodes": 49,
+                  "slo_target_s": 31.0, "policy": "demand_capped",
+                  "mix": "2hpc2ws", "seed": 1}[field]
+        other = dataclasses.replace(base, **{field: bumped})
+        assert other.cell_key() != base.cell_key(), field
+        assert other.cell_id() != base.cell_id(), field
+
+
+def test_cell_key_deterministic_and_grid_unique():
+    cells = make_grid("small") + make_grid("mix_tiny")
+    keys = [c.cell_key() for c in cells]
+    assert len(set(keys)) == len(cells)
+    assert keys == [c.cell_key() for c in cells]        # stable
+
+
+def test_shard_cells_partition_is_exact():
+    cells = make_grid("small")
+    parts = [shard_cells(cells, f"{i}/3") for i in range(3)]
+    flat = [c for p in parts for c in p]
+    assert sorted(c.cell_key() for c in flat) == \
+        sorted(c.cell_key() for c in cells)
+    assert all(len(p) >= len(cells) // 3 for p in parts)
+    with pytest.raises(ValueError):
+        shard_cells(cells, "3/3")
+    with pytest.raises(ValueError):
+        shard_cells(cells, "bogus")
+
+
+# ---------------------------------------------------------------- spools
+
+
+def test_spool_roundtrip_and_torn_line(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    rows = [{"cell_key": f"k{i}", "metrics": {"completed": i}}
+            for i in range(3)]
+    for r in rows:
+        spool_append(path, r)
+    with open(path, "a") as f:
+        f.write('{"cell_key": "torn", "metr')        # killed mid-write
+    loaded = spool_load(path)
+    assert set(loaded) == {"k0", "k1", "k2"}
+    assert loaded["k2"]["metrics"]["completed"] == 2
+
+
+# ------------------------------------------------------- shard + merge
+
+
+def test_shard_merge_reproduces_single_shot(tmp_path):
+    single = run_campaign(FAST_CELLS, workers=1, grid_name="unit")
+    spools = []
+    for i in range(2):
+        sp = str(tmp_path / f"s{i}.jsonl")
+        spools.append(sp)
+        run_campaign(FAST_CELLS, workers=1, grid_name="unit",
+                     spool_path=sp, shard=f"{i}/2")
+    merged, missing = merge_spools(spools, grid_cells=FAST_CELLS,
+                                   grid_name="unit")
+    assert missing == []
+    assert merged["reductions"] == single["reductions"]
+    assert [c["cell_key"] for c in merged["cells"]] == \
+        [c["cell_key"] for c in single["cells"]]
+    # non-timing metrics identical cell by cell
+    for a, b in zip(single["cells"], merged["cells"]):
+        for k in REDUCE_KEYS:
+            assert a["metrics"][k] == b["metrics"][k], k
+
+
+def test_merge_reports_missing_cells(tmp_path):
+    sp = str(tmp_path / "s0.jsonl")
+    run_campaign(FAST_CELLS, workers=1, spool_path=sp, shard="0/2")
+    merged, missing = merge_spools([sp], grid_cells=FAST_CELLS)
+    assert len(missing) == 2
+    assert merged["n_cells"] == 2
+
+
+def test_resume_runs_only_missing_cells(tmp_path):
+    sp = str(tmp_path / "s.jsonl")
+    # "interrupted" run: only shard 0's cells made it to the spool
+    run_campaign(FAST_CELLS, workers=1, spool_path=sp, shard="0/2")
+    art = run_campaign(FAST_CELLS, workers=1, spool_path=sp, resume=True,
+                       grid_name="unit")
+    assert art["throughput"]["skipped"] == 2
+    assert art["throughput"]["executed"] == 2
+    assert art["n_cells"] == 4
+    # second resume: nothing left to do
+    art2 = run_campaign(FAST_CELLS, workers=1, spool_path=sp, resume=True,
+                        grid_name="unit")
+    assert art2["throughput"]["executed"] == 0
+    assert art2["throughput"]["skipped"] == 4
+    assert art2["reductions"] == art["reductions"]
+
+
+def test_run_campaign_writes_v3_artifact(tmp_path):
+    out = tmp_path / "c.json"
+    art = run_campaign(FAST_CELLS[:2], workers=1, out_path=str(out),
+                       grid_name="unit")
+    disk = json.loads(out.read_text())
+    assert disk["schema"] == "phoenix-campaign-v3"
+    assert "throughput" in disk and disk["throughput"]["executed"] == 2
+    assert disk["cells"][0]["queue_sim"]["requests"] > 0
+    assert disk["cells"][0]["metrics"]["queue_sim_s"] >= 0.0
+    assert art["reductions"] == disk["reductions"]
+
+
+# ------------------------------------------------- inf-masked reductions
+
+
+def _row(key, p99, slo_met=False, unserved=0):
+    m = {k: 1.0 for k in
+         ("completed", "killed", "preemptions", "avg_turnaround_s",
+          "ws_p50_s", "ws_p95_s", "ws_violation_rate",
+          "ws_unmet_node_seconds", "ws_peak_nodes", "st_avg_alloc",
+          "ws_avg_alloc", "queue_sim_s", "wall_s")}
+    m["ws_p99_s"] = p99
+    m["ws_unserved"] = unserved
+    return {"preempt": "kill", "scheduler": "first_fit",
+            "arrival": "poisson", "total_nodes": 48, "slo_target_s": 30.0,
+            "policy": "paper", "mix": "paper2", "cell_id": key,
+            "cell_key": key, "slo_met": slo_met, "metrics": m}
+
+
+def test_reduce_metrics_masks_inf_and_reports_rate():
+    """Regression: one starved cell (inf percentiles) used to poison every
+    marginal mean containing it."""
+    rows = [_row("a", 10.0, slo_met=True), _row("b", 20.0, slo_met=True),
+            _row("c", float("inf"), unserved=5)]
+    red = reduce_metrics(rows)
+    ov = red["overall"]
+    assert ov["ws_p99_s"] == pytest.approx(15.0)        # finite-masked mean
+    assert ov["inf_rate"] == pytest.approx(1.0 / 3.0)
+    assert ov["cells"] == 3
+    assert ov["ws_unserved"] == pytest.approx(5.0 / 3.0)
+
+
+def test_reduce_metrics_all_inf_column_stays_inf():
+    rows = [_row("a", float("inf"), unserved=3),
+            _row("b", float("inf"), unserved=4)]
+    ov = reduce_metrics(rows)["overall"]
+    assert ov["ws_p99_s"] == float("inf")
+    assert ov["inf_rate"] == 1.0
+
+
+def test_reduce_metrics_order_independent():
+    rows = [_row(k, p) for k, p in
+            (("a", 10.0), ("b", 20.0), ("c", 30.0), ("d", 40.0))]
+    fwd = reduce_metrics(list(rows))
+    rev = reduce_metrics(list(reversed(rows)))
+    assert fwd == rev

@@ -1,0 +1,196 @@
+"""Equivalence of the queue-simulator implementations.
+
+The vectorized fast paths (no-wait check + constant-capacity
+Kiefer–Wolfowitz recurrence), the event-merged piecewise sweep, and the
+original per-request reference loop must produce *identical*
+``QueueMetrics`` — bit-for-bit, since all exact paths do the same float64
+arithmetic — across constant and stepped capacity traces, including the
+unserved / horizon-cutoff edge cases. The jax batched core runs in float32
+and is held to golden tolerance instead.
+"""
+import numpy as np
+import pytest
+
+from repro.core.types import SLOConfig
+from repro.serving.batching import ServiceTimeModel
+from repro.workloads.arrivals import make_trace
+from repro.workloads.queueing import (SIM_COUNTERS, capacity_steps,
+                                      counters_delta, simulate_queue,
+                                      simulate_queue_many,
+                                      simulate_queue_reference,
+                                      snapshot_counters)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # container without hypothesis: property tests skip
+    HAVE_HYPOTHESIS = False
+
+MODEL = ServiceTimeModel()
+SLO = SLOConfig(latency_target_s=30.0)
+KINDS = ("poisson", "mmpp", "diurnal", "flash_crowd")
+
+
+def random_capacity(rng, horizon, max_nodes=10, max_steps=12):
+    """Random piecewise capacity, deliberately including zero levels."""
+    ev = [(0.0, int(rng.integers(0, max_nodes)))]
+    for _ in range(int(rng.integers(0, max_steps))):
+        ev.append((float(rng.uniform(0.0, horizon)),
+                   int(rng.integers(0, max_nodes))))
+    return ev
+
+
+def assert_same(a, b, ctx=""):
+    assert a == b, f"{ctx}\n  {a}\n  {b}"
+
+
+# ----------------------------------------------------- randomized sweeps
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_all_impls_agree_on_random_piecewise(seed):
+    rng = np.random.default_rng(seed)
+    kind = KINDS[seed % len(KINDS)]
+    horizon = 3600.0
+    tr = make_trace(kind, float(rng.uniform(0.3, 4.0)), horizon, seed)
+    for _ in range(4):
+        ev = random_capacity(rng, horizon)
+        for hz in (horizon, 0.5 * horizon, None):
+            ref = simulate_queue_reference(tr, ev, MODEL, SLO, horizon=hz)
+            auto = simulate_queue(tr, ev, MODEL, SLO, horizon=hz)
+            evn = simulate_queue(tr, ev, MODEL, SLO, horizon=hz,
+                                 impl="event")
+            assert_same(ref, auto, f"auto {kind} {ev[:3]} hz={hz}")
+            assert_same(ref, evn, f"event {kind} {ev[:3]} hz={hz}")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_all_impls_agree_on_constant_capacity(seed):
+    rng = np.random.default_rng(100 + seed)
+    tr = make_trace(KINDS[seed % len(KINDS)],
+                    float(rng.uniform(0.5, 3.0)), 3600.0, seed)
+    for nodes in (0, 1, int(rng.integers(2, 8)), 500):
+        ev = [(0.0, nodes)]
+        ref = simulate_queue_reference(tr, ev, MODEL, SLO, horizon=3600.0)
+        auto = simulate_queue(tr, ev, MODEL, SLO, horizon=3600.0)
+        assert_same(ref, auto, f"constant k={nodes}")
+        if nodes > 0:
+            fast = simulate_queue(tr, ev, MODEL, SLO, horizon=3600.0,
+                                  impl="fast")
+            assert_same(ref, fast, f"fast k={nodes}")
+
+
+# ----------------------------------------------------------- edge cases
+
+
+def test_unserved_horizon_cutoff_agrees():
+    tr = make_trace("poisson", 1.0, 600.0, seed=0)
+    # starvation window then rescue, cut at a horizon inside the backlog
+    ev = [(0.0, 0), (300.0, 1), (450.0, 0), (500.0, 2)]
+    ref = simulate_queue_reference(tr, ev, MODEL, SLO, horizon=550.0)
+    auto = simulate_queue(tr, ev, MODEL, SLO, horizon=550.0)
+    assert_same(ref, auto)
+    assert ref.unserved > 0
+
+
+def test_zero_capacity_all_unserved_agrees():
+    tr = make_trace("poisson", 1.0, 600.0, seed=0)
+    for impl in ("auto", "event", "reference"):
+        m = simulate_queue(tr, [(0.0, 0)], MODEL, SLO, horizon=600.0,
+                           impl=impl)
+        assert m.unserved == len(tr)
+        assert m.violation_rate == 1.0 and not m.slo_met
+
+
+def test_empty_trace():
+    tr = make_trace("poisson", 1.0, 600.0, seed=0)
+    empty = type(tr)(np.empty(0), np.empty(0, np.int64),
+                     np.empty(0, np.int64))
+    for impl in ("auto", "event", "reference"):
+        m = simulate_queue(empty, [(0.0, 4)], MODEL, SLO, impl=impl)
+        assert m.n_requests == 0 and m.slo_met
+
+
+def test_fast_impl_rejects_contended_piecewise():
+    tr = make_trace("poisson", 2.0, 3600.0, seed=0)
+    with pytest.raises(ValueError):
+        simulate_queue(tr, [(0.0, 1), (600.0, 2)], MODEL, SLO,
+                       horizon=3600.0, impl="fast")
+    with pytest.raises(ValueError):
+        simulate_queue(tr, [(0.0, 4)], MODEL, SLO, impl="nope")
+
+
+def test_no_wait_path_used_and_counted():
+    tr = make_trace("poisson", 0.5, 1800.0, seed=0)
+    before = snapshot_counters()
+    m = simulate_queue(tr, [(0.0, 1000)], MODEL, SLO, horizon=1800.0)
+    d = counters_delta(before)
+    assert d["no_wait"] == 1 and d["requests"] == len(tr)
+    assert d["seconds"] > 0
+    assert m.mean_wait_s == 0.0
+    ref = simulate_queue_reference(tr, [(0.0, 1000)], MODEL, SLO,
+                                   horizon=1800.0)
+    assert_same(ref, m)
+
+
+def test_capacity_steps_unchanged_semantics():
+    t, k = capacity_steps([(5.0, 2), (0.0, 1), (5.0, 3)], slots_per_node=4)
+    assert list(t) == [0.0, 5.0]
+    assert list(k) == [4, 12]
+
+
+# ------------------------------------------------------------ jax batched
+
+
+def test_simulate_queue_many_matches_exact_paths():
+    traces = [make_trace(k, 1.5, 1800.0, s)
+              for s, k in enumerate(("poisson", "mmpp", "flash_crowd"))]
+    caps = [[(0.0, 2)], [(0.0, 4)], [(0.0, 1), (600.0, 3)]]  # mixed const/pw
+    many = simulate_queue_many(traces, caps, MODEL, SLO, horizon=1800.0)
+    assert len(many) == len(traces)
+    for tr, ev, m in zip(traces, caps, many):
+        ex = simulate_queue(tr, ev, MODEL, SLO, horizon=1800.0)
+        assert m.n_requests == ex.n_requests
+        assert m.unserved == ex.unserved
+        for f in ("p50_s", "p95_s", "p99_s", "mean_s", "mean_wait_s",
+                  "violation_rate"):
+            a, b = getattr(m, f), getattr(ex, f)
+            assert (np.isinf(a) and np.isinf(b)) or \
+                np.isclose(a, b, rtol=2e-4, atol=1e-3), (f, a, b)
+
+
+def test_simulate_queue_many_numpy_backend_exact():
+    traces = [make_trace("poisson", 1.0, 900.0, s) for s in range(2)]
+    caps = [[(0.0, 2)], [(0.0, 3)]]
+    many = simulate_queue_many(traces, caps, MODEL, SLO, horizon=900.0,
+                               backend="numpy")
+    for tr, ev, m in zip(traces, caps, many):
+        assert_same(simulate_queue_reference(tr, ev, MODEL, SLO,
+                                             horizon=900.0), m)
+
+
+# ------------------------------------------------- hypothesis (optional)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           rate=st.floats(0.1, 5.0),
+           nodes=st.integers(0, 8),
+           steps=st.integers(0, 8))
+    def test_property_impls_identical(seed, rate, nodes, steps):
+        rng = np.random.default_rng(seed)
+        tr = make_trace(KINDS[seed % len(KINDS)], rate, 1200.0, seed)
+        ev = [(0.0, nodes)]
+        for _ in range(steps):
+            ev.append((float(rng.uniform(0, 1200.0)),
+                       int(rng.integers(0, 8))))
+        ref = simulate_queue_reference(tr, ev, MODEL, SLO, horizon=1200.0)
+        auto = simulate_queue(tr, ev, MODEL, SLO, horizon=1200.0)
+        assert ref == auto
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_impls_identical():
+        pass
