@@ -282,6 +282,76 @@ def multi_department() -> Tuple[float, Dict]:
     return us, out
 
 
+def policy_engine() -> Tuple[float, Dict]:
+    """Perf-regression gate for the two-phase PolicyEngine refactor.
+
+    The reclaim decision moved from a hard-coded loop in provision.py into
+    plan_reclaim() — this bench proves the indirection does not regress
+    simulator event throughput. It replays one fixed 5-department
+    half-day scenario (plain node-demand timeseries: no queue simulation,
+    so the sim core IS the measured path) under every engine, min-of-3,
+    and asserts the paper engine stays above a conservative floor of the
+    pre-refactor rate recorded in BENCH.md (pre: 56k events/s, post: 52k
+    on the reference container — ~7% planner indirection, within run
+    jitter; floor set ~3.5x below to ride out CI machine variance).
+    """
+    from repro.core.simulator import ConsolidationSim
+    from repro.core.traces import synthetic_sdsc_blue, worldcup_demand_events
+    from repro.core.policies import POLICIES
+    from repro.core.types import TenantSpec
+
+    t0 = time.time()
+    day = 86400.0
+    horizon = day / 2
+
+    def specs():
+        return [
+            TenantSpec("ws-a", "latency", priority=0,
+                       demand=worldcup_demand_events(seed=0,
+                                                     horizon=horizon)),
+            TenantSpec("ws-b", "latency", priority=1, floor=2,
+                       demand=worldcup_demand_events(seed=7,
+                                                     horizon=horizon)),
+            TenantSpec("hpc-a", "batch", priority=2, weight=2.0,
+                       jobs=synthetic_sdsc_blue(seed=0, n_jobs=400,
+                                                horizon=horizon,
+                                                max_nodes=32)),
+            TenantSpec("hpc-b", "batch", priority=3, weight=1.0,
+                       jobs=synthetic_sdsc_blue(seed=1, n_jobs=400,
+                                                horizon=horizon,
+                                                max_nodes=32)),
+            TenantSpec("be", "batch", priority=9, weight=0.5, bid_weight=0.1,
+                       jobs=synthetic_sdsc_blue(seed=2, n_jobs=100,
+                                                horizon=horizon,
+                                                max_nodes=8)),
+        ]
+
+    derived: Dict = {}
+    for pol in sorted(POLICIES):
+        best, events, plans = float("inf"), 0, 0
+        for _ in range(3):
+            sim = ConsolidationSim(SimConfig(total_nodes=160, seed=0),
+                                   horizon=horizon, tenants=specs(),
+                                   policy=pol)
+            s = time.perf_counter()
+            res = sim.run()
+            dt = time.perf_counter() - s
+            if dt < best:
+                best, events = dt, len(sim.timeline)
+                plans = res.policy_state["reclaim_plans"]
+        derived[pol] = {"events": events,
+                        "events_per_s": round(events / best),
+                        "reclaim_plans": plans}
+    paper_eps = derived["paper"]["events_per_s"]
+    floor = 15_000
+    derived["paper_floor_events_per_s"] = floor
+    derived["paper_ok"] = bool(paper_eps >= floor)
+    assert paper_eps >= floor, \
+        f"policy engine regressed: paper {paper_eps} events/s < {floor}"
+    us = (time.time() - t0) * 1e6
+    return us, derived
+
+
 def beyond_paper_checkpoint_mode() -> Tuple[float, Dict]:
     """Beyond-paper: checkpoint-preemption vs the paper's kill policy."""
     t0 = time.time()

@@ -36,6 +36,7 @@ def main() -> None:
          paper_figs.beyond_paper_checkpoint_mode),
         ("request_level_slo", paper_figs.request_level_slo),
         ("multi_department", paper_figs.multi_department),
+        ("policy_engine", paper_figs.policy_engine),
         ("campaign_tiny", paper_figs.campaign_tiny),
         ("campaign_throughput", paper_figs.campaign_throughput),
         ("kernel_flash_attention", kernel_bench.bench_flash_attention),

@@ -7,7 +7,9 @@ protocol to the Resource Provision Service:
   * ``grant(n, now)``          — passively receive n nodes;
   * ``force_release(n, now)``  — give up n nodes NOW (urgent reclaim by a
     higher-priority tenant); returns the count actually released;
-  * ``node_lost(now)``         — one provisioned node died.
+  * ``node_lost(now)``         — one provisioned node died;
+  * ``signals(now, ...)``      — a ``TenantSignals`` snapshot (latency
+    headroom, queue depth, preemption cost) for phase-1 reclaim planners.
 
 ``CMSBase`` owns the ``alloc`` bookkeeping and the release skeleton; the
 concrete CMS only says how to *make nodes available* (ST: free idle first,
@@ -19,6 +21,8 @@ property: ``alloc`` only ever moves inside these verbs, in lockstep with the
 provision service's per-tenant record.
 """
 from __future__ import annotations
+
+from repro.core.types import TenantSignals
 
 
 class CMSBase:
@@ -42,6 +46,13 @@ class CMSBase:
     def demand_nodes(self) -> int:
         """How many nodes this CMS could currently use (declared demand)."""
         return 0
+
+    def signals(self, now: float, name: str = "",
+                weight: float = 1.0) -> TenantSignals:
+        """Runtime snapshot for reclaim planners (subclasses enrich it with
+        headroom / queue depth / preemption cost)."""
+        return TenantSignals(name=name, kind=self.kind, alloc=self.alloc,
+                             demand=self.demand_nodes(), weight=weight)
 
     # ---------------------------------------------------------- protocol
     def grant(self, n: int, now: float):

@@ -1,4 +1,5 @@
-"""Pluggable cooperative policies for the N-department tenancy framework.
+"""Two-phase cooperative policy engines for the N-department tenancy
+framework.
 
 The 2009 paper hard-codes one policy triple for exactly two departments:
 
@@ -7,23 +8,44 @@ The 2009 paper hard-codes one policy triple for exactly two departments:
   * an urgent WS claim forcibly reclaims from ST.
 
 ``TenantProvisionService`` (core/provision.py) generalizes the state machine
-to N registered tenants; THIS module supplies the policy objects that decide
-(a) how idle nodes are distributed across batch-class tenants and (b) in
-which order victims are drained when an urgent claim cannot be met from the
-free pool. The paper's verbatim behaviour is the named ``"paper"``
-configuration; ``"demand_capped"`` and ``"proportional_share"`` are the
-beyond-paper alternatives (arXiv:1006.1401 provisions heterogeneous
-workloads; arXiv:1004.1276 studies many consolidated communities — both
-need exactly this pluggability).
+to N registered tenants; THIS module supplies the :class:`PolicyEngine`
+objects that decide the two halves of every provisioning action:
 
-A policy never mutates service state itself: it returns grant/victim plans
-and the service applies them, so every policy inherits the same conservation
-invariants.
+  * **phase 1 — reclaim planning** (``plan_reclaim``): given a node
+    deficit, produce an *ordered reclaim plan* — which victims to drain,
+    in what order, with what per-victim cap — from per-tenant runtime
+    signals (:class:`~repro.core.types.TenantSignals`: latency headroom vs
+    SLO, queue depth, preemption cost, declared weight/bid);
+  * **phase 2 — idle distribution** (``idle_grants``): how freed/idle
+    nodes flow back to batch-class tenants.
+
+The paper's verbatim behaviour is the ``"paper"`` engine (its plan is the
+fixed reverse-priority chain, its idle rule dumps everything on the top
+batch tenant — bit-for-bit the seed semantics). ``demand_capped`` and
+``proportional_share`` are phase-2-only variants sharing the same default
+planner. Beyond them, ``slo_headroom`` plans reclaims from the latency
+tenant furthest under its SLO target first and batch tenants by cheapest
+preemption, and ``auction`` derives per-interval bids (weight x unmet
+demand) whose clearing price decides both reclaim order and idle
+distribution (arXiv:1006.1401 frames provisioning policies as exactly this
+design space; arXiv:1004.1276 motivates evaluating them over
+multi-community mixes).
+
+An engine never mutates service state itself: it returns grant/reclaim
+plans and the service applies them, so every engine inherits the same
+conservation invariants — including the floor guarantee: a plan never asks
+for nodes below a victim's declared ``floor``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.types import TenantSignals
+
+# per-engine cap on retained clearing-price / plan samples (aggregates are
+# exact; samples are for inspection and the campaign artifact)
+STATE_SAMPLES_MAX = 64
 
 
 @dataclasses.dataclass
@@ -38,34 +60,95 @@ class Tenant:
     demand: int = 0
     # proportional-share policies: relative share of idle capacity
     weight: float = 1.0
+    # forced reclaim never takes this tenant below `floor` nodes
+    floor: int = 0
+    # auction engines: bid = bid_weight x unmet demand (None -> weight)
+    bid_weight: Optional[float] = None
     # batch tenants: called to release n nodes (kill/preempt); returns freed.
     # A batch tenant WITHOUT a release hook is not forcibly reclaimable
     # (matches the paper service, which skips reclaim when unwired).
     on_force_release: Optional[Callable[[int], int]] = None
     # called when nodes are granted
     on_grant: Optional[Callable[[int], None]] = None
+    # runtime signal source (CMS / orchestrator); None -> derived snapshot
+    signals: Optional[Callable[[], TenantSignals]] = None
 
 
-class CooperativePolicy:
-    """Base cooperative policy: distribution of idle nodes + reclaim order.
+def tenant_signals(t: Tenant) -> TenantSignals:
+    """Resolve a tenant's runtime signals, falling back to a snapshot
+    derived from the registry record when no CMS source is wired."""
+    if t.signals is not None:
+        s = t.signals()
+        if s is not None:
+            s.bid = compute_bid(t, s)
+            return s
+    s = TenantSignals(name=t.name, kind=t.kind, alloc=t.alloc,
+                      demand=t.demand, weight=t.weight)
+    s.bid = compute_bid(t, s)
+    return s
 
-    ``idle_grants`` returns ``[(tenant, n), ...]`` (one entry per tenant)
-    for the service to apply; ``victim_order`` returns the tenants an urgent
-    claim may drain, most-expendable first. ``demand_driven`` tells callers
-    (the simulator) whether batch demand must be kept up to date and surplus
-    idle allocation voluntarily returned — the paper's policy ignores demand
+
+def compute_bid(t: Tenant, s: Optional[TenantSignals] = None) -> float:
+    """Per-interval bid: bid_weight (default weight) x unmet demand."""
+    unmet = s.unmet if s is not None else max(0, t.demand - t.alloc)
+    w = t.bid_weight if t.bid_weight is not None else t.weight
+    return max(0.0, float(w)) * float(unmet)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReclaimStep:
+    """One entry of a reclaim plan: drain up to ``take`` nodes from
+    ``victim`` (the service caps the actual take at the live deficit and
+    allocation when it applies the plan)."""
+    victim: str
+    take: int
+    reason: str = ""
+
+
+class PolicyEngine:
+    """Base two-phase engine: reclaim planning + idle distribution.
+
+    ``plan_reclaim`` (phase 1) returns the ordered ``ReclaimStep`` list an
+    urgent claim may drain; the default planner walks the legacy
+    ``victim_order`` chain, capping each step at what the victim can give
+    up without crossing its ``floor``. The plan covers EVERY eligible
+    victim (not just enough to cover the deficit): a victim may release
+    fewer nodes than asked, and the service must be able to continue down
+    the chain exactly like the paper's loop did.
+
+    ``idle_grants`` (phase 2) returns ``[(tenant, n), ...]`` for the
+    service to apply. ``demand_driven`` tells callers (the simulator)
+    whether batch demand must be kept up to date and surplus idle
+    allocation voluntarily returned — the paper's engine ignores demand
     entirely, so the simulator skips that bookkeeping for it.
+
+    Engines carry per-run state: how many plans were made, which victims
+    were actually drained (reported back by the service via
+    ``note_reclaimed``) and, for stateful engines like ``auction``,
+    per-interval clearing prices. ``state_snapshot()`` serializes it for
+    results/artifacts.
     """
 
     name = "base"
     demand_driven = True
+    stateful = False
 
-    # ------------------------------------------------------------- idle
-    def idle_grants(self, free: int, batch: Sequence[Tenant]
-                    ) -> List[Tuple[Tenant, int]]:
-        raise NotImplementedError
+    def __init__(self):
+        self.reclaim_plans = 0
+        self.victim_counts: Dict[str, int] = {}
+        self.victim_nodes: Dict[str, int] = {}
+        self.last_plan: List[str] = []
+        self.plan_samples: List[List[str]] = []
 
-    # ---------------------------------------------------------- reclaim
+    # ------------------------------------------------------------- phase 1
+    def plan_reclaim(self, deficit: int, tenants: Sequence[Tenant],
+                     claimant: Tenant) -> List[ReclaimStep]:
+        plan = [ReclaimStep(v.name, self.reclaimable(v), "victim-chain")
+                for v in self.victim_order(tenants, claimant)
+                if self.reclaimable(v) > 0]
+        self._note_plan(plan)
+        return plan
+
     def victim_order(self, tenants: Sequence[Tenant], claimant: Tenant
                      ) -> List[Tenant]:
         """Paper rule 3 generalized: batch tenants in REVERSE priority order
@@ -78,6 +161,53 @@ class CooperativePolicy:
              and t.priority > claimant.priority),
             key=lambda t: t.priority, reverse=True)
         return batch + latency
+
+    @staticmethod
+    def reclaimable(v: Tenant) -> int:
+        """Nodes a plan may ask this victim for: never below its floor."""
+        return max(0, v.alloc - max(0, v.floor))
+
+    @staticmethod
+    def eligible_victims(tenants: Sequence[Tenant], claimant: Tenant
+                         ) -> Tuple[List[Tenant], List[Tenant]]:
+        """(batch, latency) victims an urgent claim may legally drain:
+        every batch tenant, and latency tenants strictly below the
+        claimant's priority class (a lower-priority latency department can
+        never preempt a higher-priority one)."""
+        batch = [t for t in tenants if t.kind == "batch"]
+        latency = [t for t in tenants
+                   if t.kind == "latency" and t.name != claimant.name
+                   and t.priority > claimant.priority]
+        return batch, latency
+
+    # ----------------------------------------------------------- bookkeeping
+    def _note_plan(self, plan: List[ReclaimStep]):
+        self.reclaim_plans += 1
+        self.last_plan = [s.victim for s in plan]
+        if len(self.plan_samples) < STATE_SAMPLES_MAX:
+            self.plan_samples.append(self.last_plan)
+
+    def note_reclaimed(self, victim: str, n: int):
+        """The service reports nodes actually taken from a plan victim."""
+        if n <= 0:
+            return
+        self.victim_counts[victim] = self.victim_counts.get(victim, 0) + 1
+        self.victim_nodes[victim] = self.victim_nodes.get(victim, 0) + n
+
+    def state_snapshot(self) -> Dict:
+        """JSON-safe per-run engine state for results and artifacts."""
+        return {
+            "engine": self.name,
+            "reclaim_plans": self.reclaim_plans,
+            "victim_counts": dict(self.victim_counts),
+            "victim_nodes": dict(self.victim_nodes),
+            "last_plan": list(self.last_plan),
+        }
+
+    # ------------------------------------------------------------- phase 2
+    def idle_grants(self, free: int, batch: Sequence[Tenant]
+                    ) -> List[Tuple[Tenant, int]]:
+        raise NotImplementedError
 
     @staticmethod
     def _fill_demand(free: int, batch: Sequence[Tenant]) -> Dict[str, int]:
@@ -93,13 +223,18 @@ class CooperativePolicy:
         return grants
 
 
-class PaperPolicy(CooperativePolicy):
+# back-compat alias: the pre-engine name for the policy base class
+CooperativePolicy = PolicyEngine
+
+
+class PaperPolicy(PolicyEngine):
     """The paper's verbatim configuration: WS preempts, ALL idle to ST.
 
-    Idle nodes first cover declared batch demand in priority order (a no-op
-    in the paper's two-tenant wiring, where demand is never declared), then
-    EVERYTHING left is dumped on the highest-priority batch tenant whether
-    it asked or not."""
+    Phase 1 is the default reverse-priority victim chain; phase 2 first
+    covers declared batch demand in priority order (a no-op in the paper's
+    two-tenant wiring, where demand is never declared), then EVERYTHING
+    left is dumped on the highest-priority batch tenant whether it asked
+    or not."""
 
     name = "paper"
     demand_driven = False
@@ -113,7 +248,7 @@ class PaperPolicy(CooperativePolicy):
         return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
 
 
-class DemandCappedIdlePolicy(CooperativePolicy):
+class DemandCappedIdlePolicy(PolicyEngine):
     """Idle flows to batch tenants by priority but stops at declared demand;
     the remainder stays free (cheap to claim later — no kills)."""
 
@@ -124,7 +259,7 @@ class DemandCappedIdlePolicy(CooperativePolicy):
         return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
 
 
-class ProportionalSharePolicy(CooperativePolicy):
+class ProportionalSharePolicy(PolicyEngine):
     """Idle is split across batch tenants with unmet demand in proportion to
     their ``weight`` (water-filling: a tenant whose demand saturates early
     frees its share for the others). Leftover beyond total demand stays
@@ -166,18 +301,182 @@ class ProportionalSharePolicy(CooperativePolicy):
         return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
 
 
-POLICIES: Dict[str, Callable[[], CooperativePolicy]] = {
+class SLOHeadroomEngine(PolicyEngine):
+    """SLO-aware reclaim planning over runtime signals (ROADMAP item).
+
+    Phase-1 plan, three bands:
+
+      1. latency victims' *surplus* replicas (allocation above demand),
+         the tenant with the most latency headroom first — draining them
+         costs nothing while their SLO is comfortably met;
+      2. batch tenants by cheapest preemption (idle-absorbing or
+         just-started jobs before long-running ones), ties by reverse
+         priority;
+      3. latency victims below their demand (down to their floor, never
+         further), again most-headroom-first — the last resort, ordered so
+         the department with the most slack to its SLO target absorbs the
+         violation risk.
+
+    Phase 2 is demand-capped (idle stays free beyond declared demand, so
+    future claims are cheap)."""
+
+    name = "slo_headroom"
+
+    def plan_reclaim(self, deficit, tenants, claimant):
+        batch, latency = self.eligible_victims(tenants, claimant)
+        sig = {t.name: tenant_signals(t) for t in tenants}
+        plan: List[ReclaimStep] = []
+        # band 1: free surplus above demand, most headroom first (demand
+        # comes from the CMS signal — latency demand is not mirrored on the
+        # registry record, which only tracks batch demand)
+        by_headroom = sorted(
+            latency, key=lambda t: (-sig[t.name].latency_headroom_s,
+                                    -t.priority))
+        surplus_taken: Dict[str, int] = {}
+        for v in by_headroom:
+            surplus = min(self.reclaimable(v),
+                          max(0, v.alloc - max(sig[v.name].demand, v.floor)))
+            if surplus > 0:
+                surplus_taken[v.name] = surplus
+                plan.append(ReclaimStep(
+                    v.name, surplus,
+                    f"surplus headroom={sig[v.name].latency_headroom_s:.1f}s"))
+        # band 2: batch by cheapest preemption
+        for v in sorted(batch,
+                        key=lambda t: (sig[t.name].preemption_cost_s,
+                                       -t.priority)):
+            take = self.reclaimable(v)
+            if take > 0:
+                plan.append(ReclaimStep(
+                    v.name, take,
+                    f"preempt cost={sig[v.name].preemption_cost_s:.1f}s"))
+        # band 3: dig into latency demand down to the floor
+        for v in by_headroom:
+            take = self.reclaimable(v) - surplus_taken.get(v.name, 0)
+            if take > 0:
+                plan.append(ReclaimStep(
+                    v.name, take,
+                    f"drain headroom={sig[v.name].latency_headroom_s:.1f}s"))
+        self._note_plan(plan)
+        return plan
+
+    def idle_grants(self, free, batch):
+        grants = self._fill_demand(free, batch)
+        return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
+
+
+class AuctionEngine(PolicyEngine):
+    """Market-style engine: per-interval bids clear both phases.
+
+    Every decision interval each tenant's bid is ``bid_weight x unmet
+    demand`` (recomputed from live signals, so bids track load). Phase 2
+    sells idle nodes to batch tenants in descending-bid order, capped at
+    demand; the *clearing price* is the lowest winning bid and is recorded
+    per interval in the engine state. Phase 1 drains victims in
+    ASCENDING-bid order (the tenant that values marginal nodes least sells
+    first) — batch victims before latency victims, so the market reorders
+    the paper's chain without letting a cheap bid strip a latency
+    department of replicas while batch capacity remains — still respecting
+    priority-class eligibility and floors, and records the marginal
+    (clearing) bid of each plan."""
+
+    name = "auction"
+    stateful = True
+
+    def __init__(self):
+        super().__init__()
+        self.intervals = 0
+        self.price_sum = 0.0
+        self.price_max = 0.0
+        self.price_samples: List[float] = []
+        self.last_bids: Dict[str, float] = {}
+        self.reclaim_price_sum = 0.0
+        self.reclaim_price_n = 0
+
+    def _record_price(self, price: float):
+        self.intervals += 1
+        self.price_sum += price
+        self.price_max = max(self.price_max, price)
+        if len(self.price_samples) < STATE_SAMPLES_MAX:
+            self.price_samples.append(price)
+
+    def plan_reclaim(self, deficit, tenants, claimant):
+        batch, latency = self.eligible_victims(tenants, claimant)
+        bids = {t.name: tenant_signals(t).bid for t in tenants}
+        self.last_bids = dict(bids)
+        victims = sorted(
+            batch + latency,
+            key=lambda t: (0 if t.kind == "batch" else 1, bids[t.name],
+                           -t.priority))
+        plan = [ReclaimStep(v.name, self.reclaimable(v),
+                            f"bid={bids[v.name]:.2f}")
+                for v in victims if self.reclaimable(v) > 0]
+        # the marginal bid needed to cover the deficit is the claim's
+        # clearing price (0 when the chain cannot cover it)
+        need, price = deficit, 0.0
+        for step in plan:
+            if need <= 0:
+                break
+            price = bids[step.victim]
+            need -= step.take
+        if need > 0:
+            price = 0.0          # chain cannot cover the deficit: no clear
+        self.reclaim_price_sum += price
+        self.reclaim_price_n += 1
+        self._note_plan(plan)
+        return plan
+
+    def idle_grants(self, free, batch):
+        bids = {t.name: tenant_signals(t).bid for t in batch}
+        self.last_bids.update(bids)
+        order = sorted(batch, key=lambda t: (-bids[t.name], t.priority))
+        grants: Dict[str, int] = {}
+        price = 0.0
+        remaining = free
+        for t in order:
+            if remaining <= 0:
+                break
+            give = min(max(0, t.demand - t.alloc), remaining)
+            if give > 0:
+                grants[t.name] = give
+                remaining -= give
+                price = bids[t.name]          # lowest winning bid so far
+        if grants:
+            self._record_price(price)
+        return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
+
+    def state_snapshot(self) -> Dict:
+        out = super().state_snapshot()
+        out.update({
+            "intervals": self.intervals,
+            "clearing_price_mean":
+                self.price_sum / self.intervals if self.intervals else 0.0,
+            "clearing_price_max": self.price_max,
+            "clearing_price_samples": list(self.price_samples),
+            "reclaim_price_mean":
+                self.reclaim_price_sum / self.reclaim_price_n
+                if self.reclaim_price_n else 0.0,
+            "last_bids": dict(self.last_bids),
+        })
+        return out
+
+
+POLICIES: Dict[str, Callable[[], PolicyEngine]] = {
     PaperPolicy.name: PaperPolicy,
     DemandCappedIdlePolicy.name: DemandCappedIdlePolicy,
     ProportionalSharePolicy.name: ProportionalSharePolicy,
+    SLOHeadroomEngine.name: SLOHeadroomEngine,
+    AuctionEngine.name: AuctionEngine,
 }
+# alias: the registry IS the engine registry
+ENGINES = POLICIES
 
 
-def get_policy(policy) -> CooperativePolicy:
-    """Resolve a policy name or instance to a CooperativePolicy."""
-    if isinstance(policy, CooperativePolicy):
+def get_policy(policy) -> PolicyEngine:
+    """Resolve an engine name, class or instance to a PolicyEngine."""
+    if isinstance(policy, PolicyEngine):
         return policy
-    if isinstance(policy, type) and issubclass(policy, CooperativePolicy):
+    if isinstance(policy, type) and issubclass(policy, PolicyEngine):
         return policy()
     try:
         return POLICIES[policy]()
@@ -185,6 +484,10 @@ def get_policy(policy) -> CooperativePolicy:
         raise ValueError(
             f"unknown cooperative policy {policy!r}; "
             f"have {sorted(POLICIES)}") from None
+
+
+# alias kept so call sites can say what they mean
+get_engine = get_policy
 
 
 def __getattr__(name):

@@ -4,13 +4,16 @@ generalized from the paper's fixed ST/WS pair to an N-tenant registry.
 ``TenantProvisionService`` is a pure state machine over node *counts*
 (nodes are fungible; ``runtime/device_pool.py`` maps counts to concrete
 device slices). Departments register as :class:`~repro.core.policies.Tenant`
-records; a pluggable :class:`~repro.core.policies.CooperativePolicy` decides
-how idle nodes are distributed and in which order victims are drained when a
-latency-class tenant claims urgently:
+records; a pluggable two-phase :class:`~repro.core.policies.PolicyEngine`
+decides how idle nodes are distributed (phase 2) and plans the ordered
+reclaim chain when a latency-class tenant claims urgently (phase 1, from
+per-tenant runtime signals):
 
   * latency tenants claim urgently; the free pool is drained first, then the
-    policy's victim chain (default: batch tenants in reverse priority order,
-    then lower-priority latency tenants) is forcibly reclaimed;
+    engine's reclaim plan (paper default: batch tenants in reverse priority
+    order, then lower-priority latency tenants; ``slo_headroom``/``auction``
+    order by latency headroom / bids instead) is applied step by step —
+    never taking a victim below its declared ``floor``;
   * released nodes flow back to batch tenants per the policy's idle rule;
   * node failures shrink capacity until repair, attributed to the pool that
     lost the node (with deterministic reattribution if the named pool is
@@ -26,9 +29,9 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional
 
-from repro.core.policies import (CooperativePolicy, PaperPolicy, Tenant,
-                                 get_policy)
-from repro.core.types import TenantSpec
+from repro.core.policies import (CooperativePolicy, PaperPolicy,
+                                 PolicyEngine, Tenant, get_policy)
+from repro.core.types import TenantSignals, TenantSpec
 
 
 class TenantProvisionService:
@@ -38,7 +41,7 @@ class TenantProvisionService:
     def __init__(self, total_nodes: int, *, policy="paper"):
         self.total = total_nodes
         self.free = total_nodes
-        self.policy: CooperativePolicy = get_policy(policy)
+        self.policy: PolicyEngine = get_policy(policy)
         # insertion-ordered: registration order is the deterministic
         # attribution order for node failures and timeline columns
         self.tenants: Dict[str, Tenant] = {}
@@ -52,13 +55,16 @@ class TenantProvisionService:
 
     def register_spec(self, spec: TenantSpec, *,
                       on_grant: Optional[Callable[[int], None]] = None,
-                      on_force_release: Optional[Callable[[int], int]] = None
+                      on_force_release: Optional[Callable[[int], int]] = None,
+                      signals: Optional[Callable[[], TenantSignals]] = None
                       ) -> Tenant:
         """Register a declarative ``TenantSpec`` (core/types.py)."""
         return self.register(Tenant(
             name=spec.name, kind=spec.kind, priority=spec.priority,
-            weight=spec.weight, on_grant=on_grant,
-            on_force_release=on_force_release))
+            weight=spec.weight, floor=getattr(spec, "floor", 0),
+            bid_weight=getattr(spec, "bid_weight", None),
+            on_grant=on_grant, on_force_release=on_force_release,
+            signals=signals))
 
     # ----------------------------------------------------------- invariants
     def check(self):
@@ -88,13 +94,16 @@ class TenantProvisionService:
         """A latency tenant urgently claims n more nodes (paper rules 1/3).
 
         Drains the free pool first; the shortfall is forcibly reclaimed
-        along the policy's victim chain. Batch victims release through
-        their ``on_force_release`` hook (kill/preempt happens synchronously
-        inside it); a batch tenant without the hook is skipped — the
-        service never silently confiscates nodes it cannot make the CMS
-        give up. Latency victims are reclaimed by count (their replicas
-        are fungible); their hook, when present, is still notified.
-        Returns the number of nodes actually granted.
+        along the engine's phase-1 reclaim plan (``PolicyEngine.
+        plan_reclaim``): an ordered list of per-victim caps the service
+        applies step by step, never exceeding the live deficit, a victim's
+        allocation, or the plan's floor-respecting cap. Batch victims
+        release through their ``on_force_release`` hook (kill/preempt
+        happens synchronously inside it); a batch tenant without the hook
+        is skipped — the service never silently confiscates nodes it
+        cannot make the CMS give up. Latency victims are reclaimed by
+        count (their replicas are fungible); their hook, when present, is
+        still notified. Returns the number of nodes actually granted.
         """
         t = self.tenants[name]
         assert t.kind == "latency", f"{name} is not a latency tenant"
@@ -106,10 +115,16 @@ class TenantProvisionService:
         short = n - granted
         surplus = 0
         if short > 0:
-            for v in self.policy.victim_order(self.tenants.values(), t):
+            plan = self.policy.plan_reclaim(
+                short, list(self.tenants.values()), t)
+            for step in plan:
                 if short <= 0:
                     break
-                take = min(short, v.alloc)
+                v = self.tenants[step.victim]
+                # the floor cap is re-derived at apply time: a reentrant
+                # node_failed inside an earlier victim's hook may have
+                # shrunk this victim's alloc since the plan was made
+                take = min(short, step.take, self.policy.reclaimable(v))
                 if take <= 0:
                     continue
                 if v.on_force_release is not None:
@@ -126,6 +141,7 @@ class TenantProvisionService:
                 t.alloc += give
                 short -= give
                 surplus += got - give
+                self.policy.note_reclaimed(v.name, got)
         if surplus > 0:
             # over-released nodes go back through the idle policy (they are
             # typically re-granted to the very tenant that shed them)

@@ -74,6 +74,11 @@ class TenantResult:
     reclaim_events: int = 0
     preempted_nodes: int = 0
     latency: Optional[Dict[str, float]] = None
+    # two-phase engine accounting: how often / how many nodes the reclaim
+    # planner drained FROM this department, and its last auction bid
+    reclaimed_events: int = 0
+    reclaimed_nodes: int = 0
+    last_bid: float = 0.0
 
     @property
     def benefit(self) -> Dict[str, float]:
@@ -122,6 +127,9 @@ class SimResult:
     # (the legacy scalar fields above are the batch/latency aggregates)
     tenants: Dict[str, TenantResult] = field(default_factory=dict)
     policy: str = "paper"
+    # engine state snapshot: reclaim plans made, per-victim drain counts,
+    # and (auction) per-interval clearing prices
+    policy_state: Dict = field(default_factory=dict)
 
     @property
     def benefit_provider(self) -> int:
@@ -237,7 +245,8 @@ class ConsolidationSim:
                     request=(lambda n, name=spec.name:
                              self.svc.claim(name, n)),
                     release=(lambda n, name=spec.name:
-                             self.svc.release(name, n)))
+                             self.svc.release(name, n)),
+                    slo=spec.slo)
                 on_grant = None
                 on_force = (lambda n, s=rt.server:
                             s.force_release(n, self.now))
@@ -246,9 +255,15 @@ class ConsolidationSim:
                 rt.record.on_grant = on_grant
                 rt.record.on_force_release = on_force
                 rt.record.weight = spec.weight
+                rt.record.floor = spec.floor
+                rt.record.bid_weight = spec.bid_weight
             else:
                 rt.record = self.svc.register_spec(
                     spec, on_grant=on_grant, on_force_release=on_force)
+            # live CMS signals feed the phase-1 reclaim planner
+            rt.record.signals = (
+                lambda rt=rt: rt.server.signals(
+                    self.now, name=rt.name, weight=rt.record.weight))
             self._runtimes.append(rt)
 
         self._batch = [rt for rt in self._runtimes if rt.is_batch]
@@ -405,6 +420,11 @@ class ConsolidationSim:
                            priority=rt.spec.priority,
                            avg_alloc=rt.alloc_seconds / horizon
                            if horizon > 0 else 0.0)
+        engine = self.svc.policy
+        res.reclaimed_events = engine.victim_counts.get(rt.name, 0)
+        res.reclaimed_nodes = engine.victim_nodes.get(rt.name, 0)
+        res.last_bid = float(getattr(engine, "last_bids", {})
+                             .get(rt.name, 0.0))
         if rt.is_batch:
             completed = [j for j in rt.jobs if j.state is JobState.COMPLETED]
             tats = sorted(j.turnaround for j in completed)
@@ -457,4 +477,5 @@ class ConsolidationSim:
             ws_latency=latency[0].latency if latency else None,
             tenants=tenants,
             policy=self.policy_name,
+            policy_state=self.svc.policy.state_snapshot(),
         )

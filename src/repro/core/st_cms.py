@@ -21,7 +21,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.cms import CMSBase
 from repro.core.scheduler import SCHEDULERS
-from repro.core.types import Job, JobState, SimConfig
+from repro.core.types import Job, JobState, SimConfig, TenantSignals
 
 
 class STServer(CMSBase):
@@ -55,6 +55,27 @@ class STServer(CMSBase):
         (drives demand-aware cooperative policies; the paper's policy
         ignores it)."""
         return self.used + sum(j.size for j in self.queue)
+
+    def preemption_cost_s(self, now: float) -> float:
+        """Estimated seconds of work lost per node if one node is reclaimed
+        right now: 0 while idle nodes can absorb it; otherwise the paper's
+        kill order picks the cheapest running job, whose per-node cost is
+        its elapsed work (kill mode) or the checkpoint overhead (checkpoint
+        mode). Feeds the ``slo_headroom`` planner's cheapest-first band."""
+        if self.idle > 0 or not self.running:
+            return 0.0
+        v = min(self.running.values(), key=self._kill_key(now))
+        if self.cfg.preempt_mode == "checkpoint":
+            return self.cfg.checkpoint_cost / max(v.size, 1)
+        return max(0.0, now - v.start_time)
+
+    def signals(self, now: float, name: str = "",
+                weight: float = 1.0) -> TenantSignals:
+        return TenantSignals(
+            name=name, kind=self.kind, alloc=self.alloc,
+            demand=self.demand_nodes(), weight=weight,
+            queue_depth=len(self.queue),
+            preemption_cost_s=self.preemption_cost_s(now))
 
     # ------------------------------------------------------------ events
     def submit(self, job: Job, now: float):
@@ -94,14 +115,20 @@ class STServer(CMSBase):
             self._schedule_finish(job, finish)
 
     # ------------------------------------------------------------ reclaim
+    @staticmethod
+    def _kill_key(now: float):
+        """The paper's kill order: (size asc, running-time asc). Shared by
+        the eviction path and the preemption-cost signal so the cost
+        estimate can never drift from the actual eviction order."""
+        return lambda j: (j.size, now - j.start_time)
+
     def _make_available(self, n: int, now: float):
-        """Free n nodes: idle first, then kill/preempt jobs ordered by
-        (size asc, running-time asc) — the paper's kill order. Eviction may
-        free more than needed; the surplus stays idle in ST."""
+        """Free n nodes: idle first, then kill/preempt jobs in the paper's
+        kill order. Eviction may free more than needed; the surplus stays
+        idle in ST."""
         still_needed = n - self.idle
         if still_needed > 0:
-            victims = sorted(self.running.values(),
-                             key=lambda j: (j.size, now - j.start_time))
+            victims = sorted(self.running.values(), key=self._kill_key(now))
             got = 0
             for v in victims:
                 if got >= still_needed:

@@ -155,14 +155,25 @@ def synthetic_worldcup_load(seed: int = 0, horizon: float = TWO_WEEKS_S,
     for i in range(1, n):
         load[i] = (1 - alpha) * load[i - 1] + alpha * load[i]
 
-    # scale so that the autoscaled instance demand peaks at exactly 64
+    # scale so that the autoscaled instance demand peaks at exactly 64.
+    # The autoscaler is nonlinear in the scale (its +1/-1 windowed walk),
+    # so one rescale is not enough in general: iterate multiplicative
+    # corrections, with the exponent damped every few rounds so a 63<->65
+    # oscillation cannot cycle forever (the peak is a monotone step
+    # function of the scale, so a damped walk settles inside the
+    # peak==64 plateau).
     demand = demand_from_load(load, dt, WS_CAPACITY_RPS)
     scale = WORLDCUP_PEAK_INSTANCES / demand.max()
     load = load * scale
     demand = demand_from_load(load, dt, WS_CAPACITY_RPS)
-    # iterate once more (autoscaler is nonlinear in the scale)
-    if demand.max() != WORLDCUP_PEAK_INSTANCES:
-        load = load * (WORLDCUP_PEAK_INSTANCES / max(demand.max(), 1))
+    for i in range(32):
+        peak = int(demand.max())
+        if peak == WORLDCUP_PEAK_INSTANCES:
+            break
+        ratio = (WORLDCUP_PEAK_INSTANCES / max(peak, 1)) \
+            ** (1.0 / (1 + i // 4))
+        load = load * ratio
+        demand = demand_from_load(load, dt, WS_CAPACITY_RPS)
     return load, dt
 
 

@@ -100,6 +100,42 @@ class WSDemandProvider(Protocol):
 
 
 @dataclass
+class TenantSignals:
+    """Per-tenant runtime snapshot consumed by reclaim planners.
+
+    The two-phase ``PolicyEngine`` (core/policies.py) plans *who gives up
+    nodes* from these signals instead of a fixed priority chain: a latency
+    department far under its SLO target is a cheap victim, a batch
+    department about to checkpoint a huge job is an expensive one, and an
+    auction engine turns ``bid`` into both the reclaim order and the idle
+    clearing price. Signals are produced by the CMSes (``CMSBase.signals``)
+    in the simulator and by ``MultiTenantOrchestrator`` from real
+    serving-pool latency in the runtime — the same vocabulary either way.
+    """
+    name: str
+    kind: str = "batch"               # "batch" | "latency"
+    alloc: int = 0
+    demand: int = 0
+    weight: float = 1.0
+    # latency tenants: seconds of slack between the SLO target and the
+    # currently observed/predicted latency percentile (positive = under
+    # target, safe to drain; negative = already violating)
+    latency_headroom_s: float = 0.0
+    slo_target_s: float = 0.0
+    # batch tenants: queued jobs; latency tenants: replica shortfall
+    queue_depth: int = 0
+    # estimated seconds of work lost per node freed by forced reclaim
+    # (0 while idle nodes can absorb the reclaim)
+    preemption_cost_s: float = 0.0
+    # auction engines: this interval's bid (default weight x unmet demand)
+    bid: float = 0.0
+
+    @property
+    def unmet(self) -> int:
+        return max(0, self.demand - self.alloc)
+
+
+@dataclass
 class TenantSpec:
     """Declaration of one department (tenant) sharing the cluster.
 
@@ -121,11 +157,21 @@ class TenantSpec:
 
     weight: relative share for proportional-share policies (ignored by the
     paper's policy).
+
+    floor: nodes forced reclaim may never take (a latency department's
+    minimum replica set survives any preemption chain; 0 = fully drainable,
+    the paper's behaviour).
+
+    bid_weight: auction engines bid ``bid_weight x unmet demand`` per
+    interval; defaults to ``weight`` when unset, so a department can value
+    marginal nodes differently from its proportional share.
     """
     name: str
     kind: str = "batch"                    # "batch" | "latency"
     priority: int = 0
     weight: float = 1.0
+    floor: int = 0
+    bid_weight: Optional[float] = None
     # demand sources --------------------------------------------------
     jobs: Optional[List["Job"]] = None     # batch: HPC job trace
     demand: object = None                  # latency: [(t, n), ...] or provider

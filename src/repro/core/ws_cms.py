@@ -20,7 +20,7 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cms import CMSBase
-from repro.core.types import SimConfig
+from repro.core.types import SimConfig, SLOConfig, TenantSignals
 
 UTIL_WINDOW_S = 20.0
 UTIL_UP = 0.80
@@ -81,12 +81,18 @@ class WSServer(CMSBase):
 
     def __init__(self, cfg: SimConfig,
                  request: Callable[[int], int],
-                 release: Callable[[int], None]):
+                 release: Callable[[int], None],
+                 slo: Optional[SLOConfig] = None):
         super().__init__()
         self.cfg = cfg
         self.demand = 0
         self._request = request
         self._release = release
+        self.slo = slo
+        # most recent latency observation (runtime feeds real serving-pool
+        # percentiles through observe_latency; the simulator leaves it None
+        # and signals() falls back to an allocation-surplus proxy)
+        self.observed_latency_s: Optional[float] = None
         # diagnostics
         self.unmet_node_seconds = 0.0
         self.reclaim_events = 0
@@ -99,6 +105,33 @@ class WSServer(CMSBase):
 
     def demand_nodes(self) -> int:
         return self.demand
+
+    # -------------------------------------------------------------- signals
+    def observe_latency(self, latency_s: float):
+        """Feed a measured/predicted latency percentile (runtime path)."""
+        self.observed_latency_s = latency_s
+
+    def latency_headroom_s(self) -> float:
+        """Seconds of slack to the SLO target. With a real observation this
+        is ``target - observed``; otherwise a surplus proxy: spare replicas
+        scale the target positively, shortfall negatively (a department
+        already short on replicas has no headroom to give)."""
+        target = self.slo.latency_target_s if self.slo else 0.0
+        if self.observed_latency_s is not None:
+            return target - self.observed_latency_s
+        surplus = self.alloc - self.demand
+        if target <= 0.0:
+            return float(surplus)
+        return target * surplus / max(self.demand, 1)
+
+    def signals(self, now: float, name: str = "",
+                weight: float = 1.0) -> TenantSignals:
+        return TenantSignals(
+            name=name, kind=self.kind, alloc=self.alloc, demand=self.demand,
+            weight=weight,
+            latency_headroom_s=self.latency_headroom_s(),
+            slo_target_s=self.slo.latency_target_s if self.slo else 0.0,
+            queue_depth=max(0, self.demand - self.alloc))
 
     def _log_alloc(self, now: float):
         if self.alloc_events[-1][1] != self.alloc:

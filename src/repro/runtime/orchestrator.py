@@ -25,7 +25,7 @@ from typing import Dict, List, Optional
 
 from repro.core.provision import (ResourceProvisionService,
                                   TenantProvisionService)
-from repro.core.types import TenantSpec
+from repro.core.types import TenantSignals, TenantSpec
 from repro.runtime.device_pool import DevicePool
 from repro.runtime.elastic import ElasticTrainer
 from repro.runtime.serving_pool import ServingPool
@@ -49,6 +49,11 @@ class _LatencyDept:
         self.name = name
         self.pool = pool
         self.slo_autoscaler = slo_autoscaler
+        # most recent latency percentile: measured (observe_latency) or
+        # predicted by the SLO autoscaler at the realized replica count —
+        # feeds the TenantSignals headroom channel for reclaim planning
+        self.observed_latency_s: Optional[float] = None
+        self.demand = 0                # last requested replica count
 
 
 class MultiTenantOrchestrator:
@@ -74,27 +79,69 @@ class MultiTenantOrchestrator:
     # ------------------------------------------------------------ registry
     def add_batch(self, name: str, trainer: ElasticTrainer, *,
                   priority: int = 1, weight: float = 1.0,
-                  min_devices: int = 0) -> None:
+                  min_devices: int = 0, bid_weight: Optional[float] = None
+                  ) -> None:
         assert not self._started, "register departments before start()"
         dept = _BatchDept(name, trainer, min_devices)
         self.batch[name] = dept
         self.devs.add_group(name)
         self.svc.register_spec(
-            TenantSpec(name, "batch", priority=priority, weight=weight),
+            TenantSpec(name, "batch", priority=priority, weight=weight,
+                       floor=dept.min_devices, bid_weight=bid_weight),
             on_grant=lambda n, d=dept: self._grant_batch(d, n),
             on_force_release=lambda n, d=dept: self._force_release_batch(
-                d, n))
+                d, n),
+            signals=lambda nm=name: self._batch_signals(nm))
 
     def add_latency(self, name: str, pool: ServingPool, *,
                     priority: int = 0, weight: float = 1.0,
-                    slo_autoscaler=None) -> None:
+                    slo_autoscaler=None, floor: int = 0,
+                    bid_weight: Optional[float] = None) -> None:
         assert not self._started, "register departments before start()"
         self.latency[name] = _LatencyDept(name, pool, slo_autoscaler)
         self.devs.add_group(name)
         self.svc.register_spec(
-            TenantSpec(name, "latency", priority=priority, weight=weight),
+            TenantSpec(name, "latency", priority=priority, weight=weight,
+                       floor=floor, bid_weight=bid_weight),
             on_force_release=lambda n, nm=name: self._force_release_latency(
-                nm, n))
+                nm, n),
+            signals=lambda nm=name: self._latency_signals(nm))
+
+    # ------------------------------------------------------------- signals
+    def observe_latency(self, name: str, latency_s: float) -> None:
+        """Feed a measured serving-pool latency percentile; reclaim
+        planners see ``slo_target - latency`` as this department's
+        headroom from the next decision on."""
+        self.latency[name].observed_latency_s = latency_s
+
+    def _latency_signals(self, name: str) -> TenantSignals:
+        dept = self.latency[name]
+        rec = self.svc.tenants[name]
+        slo = getattr(dept.slo_autoscaler, "slo", None)
+        target = slo.latency_target_s if slo is not None else 0.0
+        if dept.observed_latency_s is not None and target > 0.0:
+            headroom = target - dept.observed_latency_s
+        else:
+            # surplus proxy (same fallback as the simulator's WS CMS)
+            surplus = rec.alloc - dept.demand
+            headroom = (target * surplus / max(dept.demand, 1)
+                        if target > 0.0 else float(surplus))
+        return TenantSignals(
+            name=name, kind="latency", alloc=rec.alloc, demand=dept.demand,
+            weight=rec.weight, latency_headroom_s=headroom,
+            slo_target_s=target,
+            queue_depth=max(0, dept.demand - rec.alloc))
+
+    def _batch_signals(self, name: str) -> TenantSignals:
+        dept = self.batch[name]
+        rec = self.svc.tenants[name]
+        # preemption cost in node-seconds: shrinking costs one checkpoint-
+        # resize round of the current step time per affected DP group
+        step_s = float(getattr(dept.trainer, "last_step_time_s", 0.0) or 0.0)
+        return TenantSignals(
+            name=name, kind="batch", alloc=rec.alloc, demand=rec.demand,
+            weight=rec.weight, preemption_cost_s=step_s,
+            queue_depth=max(0, rec.demand - rec.alloc))
 
     # ------------------------------------------------------------- wiring
     def _grant_batch(self, dept: _BatchDept, n: int):
@@ -171,9 +218,16 @@ class MultiTenantOrchestrator:
             rate_rps, mean_service_s, scv_service, p99_service_s,
             current=len(dept.pool.replicas))
         self._scale_latency(name, want)
+        # refresh the headroom signal with the predicted percentile at the
+        # replica count actually realized (a claim may have granted less);
+        # an explicit observe_latency() call overrides it until next tick
+        dept.observed_latency_s = dept.slo_autoscaler.predicted_latency_s(
+            rate_rps, mean_service_s, scv_service, p99_service_s,
+            len(dept.pool.replicas))
 
     def _scale_latency(self, name: str, want: int):
         dept = self.latency[name]
+        dept.demand = want
         have = len(dept.pool.replicas)
         if want > have:
             got = self.svc.claim(name, want - have)

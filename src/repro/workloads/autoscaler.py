@@ -49,6 +49,18 @@ class SLOAutoscaler:
         self.scale_down_margin = scale_down_margin
 
     # ------------------------------------------------------------ per-window
+    def predicted_latency_s(self, rate_rps: float, mean_s: float,
+                            scv_s: float, p99_service_s: float,
+                            n: int) -> float:
+        """Predicted SLO-percentile latency at ``n`` nodes for this load —
+        the runtime orchestrator feeds ``target - predicted`` into the
+        ``TenantSignals`` latency-headroom channel each control interval."""
+        if rate_rps <= 0 or mean_s <= 0:
+            return 0.0
+        return float(predicted_percentile_latency(
+            rate_rps, mean_s, scv_s, p99_service_s,
+            max(1, n) * self.model.slots_per_replica, self.slo.percentile))
+
     def desired_nodes(self, rate_rps: float, mean_s: float, scv_s: float,
                       p99_service_s: float, current: int = 0) -> int:
         """Smallest node count meeting the SLO at the given offered load."""

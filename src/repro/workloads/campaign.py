@@ -54,7 +54,7 @@ from repro.workloads.arrivals import GENERATORS, make_trace
 from repro.workloads.autoscaler import RequestWorkload
 from repro.workloads.queueing import counters_delta, snapshot_counters
 
-SCHEMA = "phoenix-campaign-v3"
+SCHEMA = "phoenix-campaign-v4"
 
 # department mixes: name -> (n_hpc, n_ws, n_best_effort)
 MIXES: Dict[str, tuple] = {
@@ -100,8 +100,12 @@ class ScenarioCell:
         return base
 
     def cell_key(self) -> str:
-        """Content hash of every field — the spool/resume/cache key."""
-        blob = json.dumps(dataclasses.asdict(self), sort_keys=True)
+        """Content hash of every field AND the artifact schema — the
+        spool/resume/cache key. Including the schema means spools written
+        by an older row format can never be silently reused in a
+        newer-schema artifact (their rows would lack the new columns)."""
+        blob = json.dumps({"schema": SCHEMA, **dataclasses.asdict(self)},
+                          sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
@@ -121,35 +125,55 @@ AXIS_KEYS = ("preempt", "scheduler", "arrival", "total_nodes",
              "slo_target_s", "policy", "mix")
 
 
-def make_grid(name: str, seed: int = 0) -> List[ScenarioCell]:
+def _policy_axis(policies: Optional[Sequence[str]],
+                 default: Sequence[str]) -> List[str]:
+    """Validate an explicit ``--policy`` subset against the registry."""
+    if policies is None:
+        return list(default)
+    unknown = [p for p in policies if p not in POLICIES]
+    if unknown:
+        raise ValueError(f"unknown policies {unknown}; "
+                         f"have {sorted(POLICIES)}")
+    return list(policies)
+
+
+def make_grid(name: str, seed: int = 0,
+              policies: Optional[Sequence[str]] = None) -> List[ScenarioCell]:
     """Named grids. `tiny` is the CI smoke grid (8 cells, < 60 s serial);
-    `mix_tiny` smokes the policy x department-mix matrix."""
+    `mix_tiny` smokes the policy x department-mix matrix. ``policies``
+    overrides each grid's policy axis (CLI ``--policy a,b,c``)."""
     if name == "tiny":
+        pols = _policy_axis(policies, ["paper"])
         return [ScenarioCell(preempt=p, scheduler="first_fit", arrival=a,
-                             total_nodes=n, slo_target_s=30.0, seed=seed)
+                             total_nodes=n, slo_target_s=30.0, policy=pol,
+                             seed=seed)
                 for p in ("kill", "checkpoint")
                 for a in ("poisson", "flash_crowd")
-                for n in (48, 64)]
+                for n in (48, 64)
+                for pol in pols]
     if name == "small":
+        pols = _policy_axis(policies, ["paper"])
         return [ScenarioCell(preempt=p, scheduler=s, arrival=a,
-                             total_nodes=n, slo_target_s=slo, seed=seed)
+                             total_nodes=n, slo_target_s=slo, policy=pol,
+                             seed=seed)
                 for p in ("kill", "checkpoint")
                 for s in ("first_fit", "easy_backfill")
                 for a in ("poisson", "mmpp", "flash_crowd")
                 for n in (48, 64)
-                for slo in (30.0,)]
+                for slo in (30.0,)
+                for pol in pols]
     if name == "mix_tiny":
         return [ScenarioCell(preempt="kill", scheduler="first_fit",
                              arrival="poisson", total_nodes=96,
                              slo_target_s=30.0, policy=pol, mix="2hpc2ws",
                              seed=seed)
-                for pol in sorted(POLICIES)]
+                for pol in _policy_axis(policies, sorted(POLICIES))]
     if name == "mix":
         return [ScenarioCell(preempt=p, scheduler="first_fit",
                              arrival="flash_crowd", total_nodes=n,
                              slo_target_s=30.0, policy=pol, mix=m, seed=seed)
                 for p in ("kill", "checkpoint")
-                for pol in sorted(POLICIES)
+                for pol in _policy_axis(policies, sorted(POLICIES))
                 for m in ("2hpc2ws", "2hpc2ws1be")
                 for n in (96, 128)]
     if name == "full":
@@ -162,7 +186,7 @@ def make_grid(name: str, seed: int = 0) -> List[ScenarioCell]:
                 for a in sorted(GENERATORS)
                 for n in (40, 48, 64, 96)
                 for slo in (20.0, 30.0, 60.0)
-                for pol in sorted(POLICIES)
+                for pol in _policy_axis(policies, sorted(POLICIES))
                 for m in sorted(MIXES)]
     raise ValueError(f"unknown grid {name!r}; "
                      f"have tiny/small/mix_tiny/mix/full")
@@ -287,8 +311,14 @@ def run_cell(cell: ScenarioCell) -> Dict:
                         "seconds": qd["seconds"]}
     out["tenant_metrics"] = {
         name: {"kind": t.kind, "priority": t.priority,
-               "avg_alloc": t.avg_alloc, **t.benefit}
+               "avg_alloc": t.avg_alloc,
+               "reclaimed_events": t.reclaimed_events,
+               "reclaimed_nodes": t.reclaimed_nodes,
+               "last_bid": t.last_bid, **t.benefit}
         for name, t in res.tenants.items()}
+    # v4: per-cell engine state — reclaim orderings taken and (auction)
+    # clearing prices, straight from the engine's snapshot
+    out["policy_state"] = res.policy_state
     return out
 
 
@@ -533,6 +563,9 @@ def _main_run(argv) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--grid", default="tiny",
                     choices=["tiny", "small", "mix_tiny", "mix", "full"])
+    ap.add_argument("--policy", default=None, metavar="P1,P2,...",
+                    help="override the grid's policy axis with this "
+                         f"comma-separated subset of {sorted(POLICIES)}")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="campaign.json")
@@ -550,7 +583,8 @@ def _main_run(argv) -> int:
         tag = f".shard{args.shard.replace('/', 'of')}" if args.shard else ""
         spool = f"{args.out}{tag}.spool.jsonl"
 
-    cells = make_grid(args.grid, seed=args.seed)
+    policies = args.policy.split(",") if args.policy else None
+    cells = make_grid(args.grid, seed=args.seed, policies=policies)
     art = run_campaign(cells, workers=args.workers, out_path=args.out,
                        grid_name=args.grid, spool_path=spool,
                        resume=args.resume, shard=args.shard)
@@ -567,12 +601,16 @@ def _main_merge(argv) -> int:
     ap.add_argument("--grid", default=None,
                     choices=["tiny", "small", "mix_tiny", "mix", "full"],
                     help="order/verify rows against this named grid")
+    ap.add_argument("--policy", default=None, metavar="P1,P2,...",
+                    help="the --policy subset the shards ran with")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--allow-partial", action="store_true",
                     help="merge even if grid cells are missing")
     args = ap.parse_args(argv)
 
-    grid_cells = make_grid(args.grid, seed=args.seed) if args.grid else None
+    policies = args.policy.split(",") if args.policy else None
+    grid_cells = make_grid(args.grid, seed=args.seed,
+                           policies=policies) if args.grid else None
     art, missing = merge_spools(args.spools, grid_cells=grid_cells,
                                 grid_name=args.grid or "merged")
     if missing:

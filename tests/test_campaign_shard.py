@@ -136,7 +136,7 @@ def test_run_campaign_writes_v3_artifact(tmp_path):
     art = run_campaign(FAST_CELLS[:2], workers=1, out_path=str(out),
                        grid_name="unit")
     disk = json.loads(out.read_text())
-    assert disk["schema"] == "phoenix-campaign-v3"
+    assert disk["schema"] == "phoenix-campaign-v4"
     assert "throughput" in disk and disk["throughput"]["executed"] == 2
     assert disk["cells"][0]["queue_sim"]["requests"] > 0
     assert disk["cells"][0]["metrics"]["queue_sim_s"] >= 0.0

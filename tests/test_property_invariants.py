@@ -15,6 +15,7 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.policies import POLICIES
 from repro.core.simulator import ConsolidationSim
 from repro.core.types import Job, JobState, SimConfig
 
@@ -89,6 +90,87 @@ def test_invariants_hold(jobs, demand, total, mode):
                      for j in sim.jobs)
     assert n_terminal == len(sim.jobs)
     assert res.completed + res.killed <= res.submitted
+
+
+@st.composite
+def engine_tenant_sets(draw):
+    n = draw(st.integers(2, 6))
+    rows = []
+    for i in range(n):
+        kind = draw(st.sampled_from(["batch", "latency"]))
+        floor = draw(st.integers(0, 6)) if kind == "latency" else 0
+        rows.append((f"t{i}", kind, draw(st.integers(0, 5)),
+                     draw(st.floats(0.0, 4.0)), floor))
+    if not any(k == "latency" for _, k, _, _, _ in rows):
+        name, _, prio, w, _ = rows[0]
+        rows[0] = (name, "latency", prio, w, draw(st.integers(0, 6)))
+    return rows
+
+
+@given(total=st.integers(10, 300),
+       policy=st.sampled_from(sorted(POLICIES)),
+       rows=engine_tenant_sets(),
+       ops=st.lists(
+           st.tuples(st.sampled_from(["claim", "release", "demand",
+                                      "armfail", "repair"]),
+                     st.integers(0, 5),       # tenant index
+                     st.integers(0, 120)),    # amount
+           max_size=50))
+@settings(max_examples=60, deadline=None)
+def test_any_engine_conserves_and_respects_floors_under_faults(
+        total, policy, rows, ops):
+    """ANY PolicyEngine: node conservation holds and forced reclaim never
+    takes a latency tenant below its floor — including when ``node_failed``
+    fires MID-RECLAIM from inside a victim's force-release hook."""
+    from repro.core.policies import Tenant
+    from repro.core.provision import TenantProvisionService
+
+    svc = TenantProvisionService(total, policy=policy)
+    arm = {"fail": False, "repairs_due": 0}
+    tenants = []
+
+    def release_hook(name):
+        def hook(n):
+            rec = svc.tenants[name]
+            if arm["fail"] and svc.total > 0:
+                arm["fail"] = False
+                svc.node_failed(name)       # a node dies mid-eviction
+                arm["repairs_due"] += 1
+            return min(n, rec.alloc)
+        return hook
+
+    for name, kind, prio, weight, floor in rows:
+        tenants.append(svc.register(Tenant(
+            name, kind, priority=prio, weight=weight, floor=floor,
+            on_force_release=release_hook(name)
+            if kind == "batch" else None)))
+
+    for op, ti, n in ops:
+        t = tenants[ti % len(tenants)]
+        if op == "claim" and t.kind == "latency":
+            # forced reclaim must not push any OTHER latency tenant below
+            # min(its floor, its current alloc)
+            before = {x.name: x.alloc for x in tenants
+                      if x.kind == "latency" and x.name != t.name}
+            got = svc.claim(t.name, n)
+            assert 0 <= got <= n
+            for x in tenants:
+                if x.kind == "latency" and x.name != t.name:
+                    assert x.alloc >= min(x.floor, before[x.name]), \
+                        (x.name, x.alloc, x.floor, before[x.name])
+        elif op == "release":
+            svc.release(t.name, n)
+        elif op == "demand" and t.kind == "batch":
+            svc.set_demand(t.name, n)
+        elif op == "armfail":
+            arm["fail"] = True
+        elif op == "repair" and arm["repairs_due"] > 0:
+            svc.node_repaired()
+            arm["repairs_due"] -= 1
+        svc.check()
+        assert sum(x.alloc for x in tenants) + svc.free == svc.total
+        assert svc.free >= 0
+        assert all(x.alloc >= 0 for x in tenants)
 
 
 @given(total=st.integers(16, 300), req=st.lists(st.integers(1, 64),

@@ -20,14 +20,15 @@ except ImportError:       # container without hypothesis: property tests skip
     HAS_HYPOTHESIS = False
 
 from repro.core.experiment import run_dynamic
-from repro.core.policies import (DemandCappedIdlePolicy, PaperPolicy,
-                                 POLICIES, ProportionalSharePolicy,
+from repro.core.policies import (AuctionEngine, DemandCappedIdlePolicy,
+                                 PaperPolicy, POLICIES,
+                                 ProportionalSharePolicy, SLOHeadroomEngine,
                                  Tenant, get_policy)
 from repro.core.provision import (ResourceProvisionService,
                                   TenantProvisionService)
 from repro.core.simulator import (ConsolidationSim, downsample_timeline)
 from repro.core.traces import synthetic_sdsc_blue, worldcup_demand_events
-from repro.core.types import SimConfig, TenantSpec
+from repro.core.types import SimConfig, TenantSignals, TenantSpec
 
 DAY = 86400.0
 
@@ -193,8 +194,222 @@ def test_get_policy_resolves_names_classes_instances():
     assert get_policy("paper").name == "paper"
     assert get_policy(PaperPolicy).name == "paper"
     assert get_policy(DemandCappedIdlePolicy()).name == "demand_capped"
+    assert get_policy("slo_headroom").name == "slo_headroom"
+    assert get_policy("auction").name == "auction"
     with pytest.raises(ValueError):
         get_policy("nope")
+
+
+# --------------------------------------------------- two-phase engine units
+
+def _wire_signals(t: Tenant, **kw):
+    """Attach a fixed TenantSignals snapshot to a tenant record."""
+    base = dict(name=t.name, kind=t.kind, alloc=t.alloc, demand=t.demand,
+                weight=t.weight)
+    base.update(kw)
+    t.signals = lambda: TenantSignals(**base)
+    return t
+
+
+def test_slo_headroom_plan_orders_surplus_cheapest_then_drain():
+    """Band order: latency surplus (most headroom first), batch by cheapest
+    preemption, then latency drained down to the floor — never below it."""
+    eng = SLOHeadroomEngine()
+    claimant = Tenant("ws-hot", "latency", priority=0)
+    ws_a = _wire_signals(Tenant("ws-a", "latency", priority=1, alloc=10,
+                                floor=2),
+                         demand=6, latency_headroom_s=20.0)
+    ws_b = _wire_signals(Tenant("ws-b", "latency", priority=2, alloc=8,
+                                floor=1),
+                         demand=8, latency_headroom_s=5.0)
+    hpc_cheap = _wire_signals(Tenant("hpc-cheap", "batch", priority=3,
+                                     alloc=12),
+                              demand=12, preemption_cost_s=30.0)
+    hpc_dear = _wire_signals(Tenant("hpc-dear", "batch", priority=4,
+                                    alloc=12),
+                             demand=12, preemption_cost_s=900.0)
+    tenants = [claimant, ws_a, ws_b, hpc_cheap, hpc_dear]
+    plan = eng.plan_reclaim(100, tenants, claimant)
+    order = [(s.victim, s.take) for s in plan]
+    # band 1: only ws-a has surplus (10 alloc vs 6 demand)
+    assert order[0] == ("ws-a", 4)
+    # band 2: batch, cheapest preemption first
+    assert order[1] == ("hpc-cheap", 12)
+    assert order[2] == ("hpc-dear", 12)
+    # band 3: latency drained most-headroom-first, down to floors only
+    assert order[3] == ("ws-a", 4)       # 10 - floor 2 - surplus 4
+    assert order[4] == ("ws-b", 7)       # 8 - floor 1
+    # floors are never crossed by any step combination
+    assert sum(n for v, n in order if v == "ws-a") == 10 - 2
+    assert sum(n for v, n in order if v == "ws-b") == 8 - 1
+
+
+def test_auction_reclaim_order_is_ascending_bid_batch_first():
+    eng = AuctionEngine()
+    claimant = Tenant("ws-hot", "latency", priority=0)
+    # bids = weight x unmet demand
+    hpc_busy = Tenant("hpc-busy", "batch", priority=3, alloc=10, demand=50,
+                      weight=1.0)                       # bid 40
+    hpc_idle = Tenant("hpc-idle", "batch", priority=2, alloc=10, demand=10,
+                      weight=1.0)                       # bid 0
+    ws_lo = Tenant("ws-lo", "latency", priority=1, alloc=6, demand=6,
+                   weight=1.0)                          # bid 0
+    tenants = [claimant, hpc_busy, hpc_idle, ws_lo]
+    plan = eng.plan_reclaim(15, tenants, claimant)
+    assert [s.victim for s in plan] == ["hpc-idle", "hpc-busy", "ws-lo"]
+    # deficit 15 > hpc-idle's 10: the plan digs into hpc-busy, whose bid
+    # (40) is the marginal price recorded for this claim
+    assert eng.reclaim_price_n == 1
+    assert eng.reclaim_price_sum == pytest.approx(40.0)
+    snap = eng.state_snapshot()
+    assert snap["engine"] == "auction"
+    assert snap["last_plan"] == ["hpc-idle", "hpc-busy", "ws-lo"]
+
+
+def test_auction_idle_grants_by_descending_bid_record_clearing_price():
+    eng = AuctionEngine()
+    a = Tenant("a", "batch", priority=1, alloc=0, demand=30, weight=1.0)
+    b = Tenant("b", "batch", priority=2, alloc=0, demand=30, weight=3.0)
+    grants = dict((t.name, n) for t, n in eng.idle_grants(40, [a, b]))
+    # b bids 90, a bids 30: b is served first, a gets the remainder
+    assert grants == {"b": 30, "a": 10}
+    snap = eng.state_snapshot()
+    assert snap["intervals"] == 1
+    assert snap["clearing_price_mean"] == pytest.approx(30.0)  # lowest win
+    assert snap["clearing_price_samples"] == [pytest.approx(30.0)]
+
+
+def test_bid_weight_overrides_weight_in_bids():
+    eng = AuctionEngine()
+    a = Tenant("a", "batch", priority=1, alloc=0, demand=10, weight=1.0,
+               bid_weight=9.0)
+    b = Tenant("b", "batch", priority=2, alloc=0, demand=10, weight=5.0)
+    grants = dict((t.name, n) for t, n in eng.idle_grants(10, [a, b]))
+    assert grants == {"a": 10}           # a's bid 90 beats b's 50
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_claim_never_reclaims_below_latency_floor(policy):
+    """Any engine's plan respects a latency victim's floor (the paper's
+    behaviour is the floor=0 degenerate case)."""
+    svc = TenantProvisionService(20, policy=policy)
+    svc.register(Tenant("hot", "latency", priority=0))
+    svc.register(Tenant("cold", "latency", priority=5, floor=3))
+    svc.register(Tenant("hpc", "batch", priority=2,
+                        on_force_release=lambda n: n))
+    # fill: cold holds 8, hpc holds 12, nothing free
+    got = svc.claim("cold", 8)
+    assert got == 8
+    svc.set_demand("hpc", 12)
+    # hot claims everything: hpc fully drained, cold only down to floor 3
+    got = svc.claim("hot", 20)
+    assert svc.tenants["cold"].alloc >= 3
+    assert got == 20 - 3
+    svc.check()
+
+
+def test_engine_reclaim_state_reaches_sim_results():
+    horizon = DAY / 2
+    sim = ConsolidationSim(SimConfig(total_nodes=96), horizon=horizon,
+                           tenants=_mix_specs(horizon),
+                           policy="slo_headroom")
+    res = sim.run()
+    ps = res.policy_state
+    assert ps["engine"] == "slo_headroom"
+    assert ps["reclaim_plans"] > 0
+    # nodes drained per victim are attributed on the TenantResults too
+    drained = {n: t.reclaimed_nodes for n, t in res.tenants.items()
+               if t.reclaimed_nodes}
+    assert drained and drained == {k: v for k, v in
+                                   ps["victim_nodes"].items() if v}
+
+
+def test_auction_clearing_prices_reach_sim_results():
+    horizon = DAY / 2
+    sim = ConsolidationSim(SimConfig(total_nodes=96), horizon=horizon,
+                           tenants=_mix_specs(horizon), policy="auction")
+    res = sim.run()
+    ps = res.policy_state
+    assert ps["engine"] == "auction"
+    assert ps["intervals"] > 0
+    assert ps["clearing_price_mean"] > 0.0
+    assert ps["clearing_price_max"] >= ps["clearing_price_mean"]
+    assert any(t.last_bid > 0 for t in res.tenants.values())
+
+
+# ------------------------------------------- faults mid-reclaim (any engine)
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_node_failed_mid_reclaim_conserves_and_respects_floors(policy):
+    """A node failure firing from INSIDE a victim's force-release hook (the
+    runtime analogue: a host dies while the trainer checkpoints out) must
+    not desync conservation, and the latency floor still holds."""
+    svc = TenantProvisionService(24, policy=policy)
+    svc.register(Tenant("hot", "latency", priority=0))
+    svc.register(Tenant("cold", "latency", priority=5, floor=2))
+    fired = {"n": 0}
+
+    def flaky_release(n):
+        # first reclaim round: a node dies mid-eviction, then release
+        if fired["n"] == 0:
+            fired["n"] = 1
+            svc.node_failed("hpc")
+        rec = svc.tenants["hpc"]
+        return min(n, rec.alloc)
+
+    svc.register(Tenant("hpc", "batch", priority=2,
+                        on_force_release=flaky_release))
+    assert svc.claim("cold", 6) == 6
+    svc.set_demand("hpc", 18)
+    got = svc.claim("hot", 24)           # forces hpc + cold reclaim
+    assert fired["n"] == 1
+    # node_failed fired inside the claim: total shrank by exactly 1
+    assert svc.total == 23
+    assert svc.tenants["cold"].alloc >= 2
+    # conservation after the dust settles
+    svc.check()
+    assert got <= 24
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_mid_reclaim_failure_on_latency_victim_still_respects_floor(policy):
+    """The floor cap is re-derived when a plan step is APPLIED: a node
+    failure attributed to a latency victim mid-plan shrinks its alloc, and
+    the stale plan-time cap must not drain it below its floor."""
+    svc = TenantProvisionService(20, policy=policy)
+    svc.register(Tenant("hot", "latency", priority=0))
+    cold = svc.register(Tenant("cold", "latency", priority=5, floor=4))
+    # cold's CMS reports its allocation fully used (no band-1 surplus for
+    # slo_headroom), so every engine reclaims batch before touching it
+    cold.signals = lambda: TenantSignals(
+        name="cold", kind="latency", alloc=cold.alloc, demand=cold.alloc)
+
+    def fail_on_cold_then_release(n):
+        rec = svc.tenants["hpc"]
+        if svc.tenants["cold"].alloc > 0:
+            svc.node_failed("cold")      # dead node lands on the latency dept
+        return min(n, rec.alloc)
+
+    svc.register(Tenant("hpc", "batch", priority=2,
+                        on_force_release=fail_on_cold_then_release))
+    assert svc.claim("cold", 10) == 10
+    svc.set_demand("hpc", 10)
+    svc.claim("hot", 20)
+    # cold lost 1 node to the failure (alloc 10 -> 9), then reclaim may
+    # only take it down to its floor, not to plan-time (10 - 4 = 6) below it
+    assert svc.tenants["cold"].alloc >= 4
+    svc.check()
+
+
+def test_auction_uncoverable_deficit_clears_at_zero():
+    """Docstring contract: when the whole chain cannot cover the deficit
+    the claim clears at price 0 (no marginal winning bid exists)."""
+    eng = AuctionEngine()
+    claimant = Tenant("hot", "latency", priority=0)
+    hpc = Tenant("hpc", "batch", priority=2, alloc=5, demand=50, weight=1.0)
+    eng.plan_reclaim(100, [claimant, hpc], claimant)
+    assert eng.reclaim_price_n == 1
+    assert eng.reclaim_price_sum == 0.0
 
 
 def test_claim_credits_over_release_without_desync():
@@ -356,6 +571,41 @@ def test_multitenant_orchestrator_routes_counts_to_devices():
     assert len(ta.devices) == 8 and len(tb.devices) == 4
     orch.devs.check()
     orch.svc.check()
+
+
+def test_multitenant_orchestrator_feeds_latency_signals_to_engine():
+    """The runtime twin of the simulator's signal path: measured serving
+    latency becomes TenantSignals headroom, and the slo_headroom engine
+    drains the pool with the most headroom first."""
+    from repro.runtime.orchestrator import MultiTenantOrchestrator
+
+    devices = [f"dev{i}" for i in range(12)]
+    orch = MultiTenantOrchestrator(devices=devices, policy="slo_headroom")
+    hot, cozy = _StubPool(), _StubPool()
+    tr = _StubTrainer(model_size=2, global_batch=2)
+    orch.add_latency("ws-hot", hot, priority=0, floor=1)
+    orch.add_latency("ws-cozy", cozy, priority=1, floor=1)
+    orch.add_batch("hpc", tr, priority=2)
+    orch.start()
+    orch.latency_tick("ws-cozy", 4.0)
+    assert len(cozy.replicas) == 4
+
+    # real latency observations flow into the signals channel
+    orch.observe_latency("ws-cozy", 0.5)
+    sig = orch.svc.tenants["ws-cozy"].signals()
+    assert sig.kind == "latency" and sig.alloc == 4
+    assert sig.latency_headroom_s == 0.0    # no SLO autoscaler -> target 0
+
+    # a hot claim bigger than free+trainer drains ws-cozy, but only down
+    # to its floor
+    orch.latency_tick("ws-hot", 11.0)
+    assert len(cozy.replicas) >= 1
+    assert len(hot.replicas) >= 8
+    orch.devs.check()
+    orch.svc.check()
+    state = orch.svc.policy.state_snapshot()
+    assert state["engine"] == "slo_headroom"
+    assert "ws-cozy" in state["victim_nodes"]
 
 
 # ------------------------------------------------------- property invariant

@@ -31,6 +31,19 @@ def test_worldcup_peak_is_64_instances():
     assert demand.max() == WORLDCUP_PEAK_INSTANCES
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 5, 7])
+@pytest.mark.parametrize("horizon_days", [2, 14])
+def test_worldcup_peak_calibration_invariant(seed, horizon_days):
+    """The generator iterates the rescale to a fixed point: the autoscaled
+    peak must hit exactly 64 instances for ANY seed/horizon, not just the
+    ones where a single extra rescale happened to land (the old exact
+    float `!=` + one-shot correction did not guarantee this)."""
+    horizon = horizon_days * 86400.0
+    load, dt = synthetic_worldcup_load(seed=seed, horizon=horizon)
+    demand = demand_from_load(load, dt, WS_CAPACITY_RPS)
+    assert int(demand.max()) == WORLDCUP_PEAK_INSTANCES
+
+
 def test_worldcup_peak_to_normal_ratio_high():
     load, _ = synthetic_worldcup_load(seed=0)
     ratio = load.max() / np.median(load)
