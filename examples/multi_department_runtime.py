@@ -9,6 +9,17 @@ costs), shrinking trainers by whole DP groups; when the spike passes, idle
 devices reflow and the trainers grow back — no training work lost.
 
     PYTHONPATH=src python examples/multi_department_runtime.py
+
+With a budget-constrained market engine the serving department pays the
+trainers' per-node bids for every device it preempts (beyond its floor);
+watch its remaining budget drain across the spike until it can no longer
+afford the replicas its SLO wants — the department throttles ITSELF
+(at --budget 3 the peak gets 3 replicas instead of 4 and the latency
+headroom collapses from +0.80s to +0.21s; once fully broke it falls back
+to its floor):
+
+    PYTHONPATH=src python examples/multi_department_runtime.py \\
+        --policy budget_auction --budget 3
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -36,7 +47,11 @@ def main(argv=None):
     ap.add_argument("--arch", default="deepseek-7b")
     ap.add_argument("--policy", default="slo_headroom")
     ap.add_argument("--intervals", type=int, default=8)
+    ap.add_argument("--budget", type=float, default=0.0,
+                    help="serving department's market budget (tokens; "
+                         "0 = unlimited) for the budget engines")
     args = ap.parse_args(argv)
+    budget = args.budget if args.budget > 0 else None
 
     cfg = reduced_config(ARCHS[args.arch])
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -53,7 +68,8 @@ def main(argv=None):
 
     orch = MultiTenantOrchestrator(policy=args.policy)
     orch.add_latency("serve", pool, priority=0, slo_autoscaler=scaler,
-                     floor=1)
+                     floor=1, budget=budget,
+                     bid_policy="slo_elastic" if budget else "linear")
     ta, tb = trainer(), trainer()
     orch.add_batch("train-a", ta, priority=1, weight=2.0, min_devices=1)
     orch.add_batch("train-b", tb, priority=2, weight=1.0, min_devices=1)
@@ -68,11 +84,16 @@ def main(argv=None):
         ma = orch.train_steps("train-a", 1)
         mb = orch.train_steps("train-b", 1)
         sig = orch.svc.tenants["serve"].signals()
+        market = orch.market_state()
+        wallet = ""
+        if market is not None and budget is not None:
+            wallet = (f"  budget={market['remaining']['serve']:6.1f}/"
+                      f"{budget:g} left")
         print(f"interval {i}: rate={rate:5.1f} req/s  "
               f"replicas={len(pool.replicas)}  "
               f"headroom={sig.latency_headroom_s:+6.2f}s  "
               f"train-a devs={ma['devices']} step={ma['step']}  "
-              f"train-b devs={mb['devices']} step={mb['step']}")
+              f"train-b devs={mb['devices']} step={mb['step']}{wallet}")
 
     print("\nper-department benefit summary")
     print("------------------------------")
@@ -92,6 +113,12 @@ def main(argv=None):
     print(f"  engine={state['engine']}  reclaim_plans="
           f"{state['reclaim_plans']}  last_plan={state['last_plan']}  "
           f"trainer_shrinks={len(shrinks)}")
+    market = orch.market_state()
+    if market is not None:
+        spend = {n: round(v, 1) for n, v in market["spend"].items()}
+        print(f"  market   spend={spend}  clearing_prices="
+              f"{[round(p, 2) for p in market['clearing_prices'][:8]]}  "
+              f"transactions={market['transactions']}")
     orch.devs.check()
     orch.svc.check()
     return 0

@@ -9,7 +9,12 @@ protocol to the Resource Provision Service:
     higher-priority tenant); returns the count actually released;
   * ``node_lost(now)``         — one provisioned node died;
   * ``signals(now, ...)``      — a ``TenantSignals`` snapshot (latency
-    headroom, queue depth, preemption cost) for phase-1 reclaim planners.
+    headroom, queue depth, preemption cost) for phase-1 reclaim planners;
+    the policy layer derives per-interval bids from it (``compute_bid`` /
+    ``unit_bid`` in core/policies.py — linear, or slo_elastic where the
+    bid rises as the reported latency headroom shrinks, which is why the
+    WS proxy headroom is clamped at zero when no real latency feed is
+    wired).
 
 ``CMSBase`` owns the ``alloc`` bookkeeping and the release skeleton; the
 concrete CMS only says how to *make nodes available* (ST: free idle first,
@@ -23,6 +28,20 @@ provision service's per-tenant record.
 from __future__ import annotations
 
 from repro.core.types import TenantSignals
+
+
+def proxy_headroom_s(alloc: int, demand: int, target_s: float) -> float:
+    """Latency-headroom proxy for a tenant WITHOUT a real latency feed:
+    spare replicas scale the SLO target positively; a replica shortfall is
+    NOT yet a measured violation, so the proxy clamps at zero (a negative
+    prediction would inflate slo_elastic bids while the shortfall is
+    already reported through ``queue_depth``/``unmet``). Shared by the
+    simulator's WS CMS and the runtime orchestrator so their bids can
+    never diverge."""
+    surplus = max(0, alloc - demand)
+    if target_s <= 0.0:
+        return float(surplus)
+    return target_s * surplus / max(demand, 1)
 
 
 class CMSBase:

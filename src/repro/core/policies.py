@@ -27,9 +27,15 @@ planner. Beyond them, ``slo_headroom`` plans reclaims from the latency
 tenant furthest under its SLO target first and batch tenants by cheapest
 preemption, and ``auction`` derives per-interval bids (weight x unmet
 demand) whose clearing price decides both reclaim order and idle
-distribution (arXiv:1006.1401 frames provisioning policies as exactly this
-design space; arXiv:1004.1276 motivates evaluating them over
-multi-community mixes).
+distribution. ``budget_auction`` and ``second_price`` turn the auction
+into a real market: tenants spend a finite ``budget`` over the horizon
+(ledger in :class:`~repro.core.types.MarketState`), bids can be
+SLO-elastic (rising as latency headroom shrinks), idle nodes clear at the
+lowest winning (first-price) or highest losing (Vickrey) per-node bid,
+and a broke tenant falls back to its floor (arXiv:1006.1401 frames
+provisioning policies as exactly this resource-economy design space;
+arXiv:1004.1276 motivates per-community budgets over multi-community
+mixes).
 
 An engine never mutates service state itself: it returns grant/reclaim
 plans and the service applies them, so every engine inherits the same
@@ -39,13 +45,17 @@ for nodes below a victim's declared ``floor``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.types import TenantSignals
+from repro.core.types import MarketState, TenantSignals
 
 # per-engine cap on retained clearing-price / plan samples (aggregates are
 # exact; samples are for inspection and the campaign artifact)
 STATE_SAMPLES_MAX = 64
+# slo_elastic bids scale between 1x (full latency headroom) and this cap
+# (deep SLO violation); 2x corresponds to exactly-zero headroom
+ELASTIC_BID_MAX = 4.0
 
 
 @dataclasses.dataclass
@@ -64,6 +74,10 @@ class Tenant:
     floor: int = 0
     # auction engines: bid = bid_weight x unmet demand (None -> weight)
     bid_weight: Optional[float] = None
+    # market engines: tokens spendable across the run (None = unlimited)
+    budget: Optional[float] = None
+    # "linear" | "slo_elastic" (bid rises as latency headroom shrinks)
+    bid_policy: str = "linear"
     # batch tenants: called to release n nodes (kill/preempt); returns freed.
     # A batch tenant WITHOUT a release hook is not forcibly reclaimable
     # (matches the paper service, which skips reclaim when unwired).
@@ -88,11 +102,33 @@ def tenant_signals(t: Tenant) -> TenantSignals:
     return s
 
 
+def bid_elasticity(t: Tenant, s: Optional[TenantSignals]) -> float:
+    """``slo_elastic`` multiplier: 1x at full latency headroom, 2x at zero
+    headroom, up to ``ELASTIC_BID_MAX`` in deep violation. ``linear``
+    tenants (and tenants without an SLO target) always get 1x."""
+    if getattr(t, "bid_policy", "linear") != "slo_elastic" or s is None:
+        return 1.0
+    target = s.slo_target_s
+    if target <= 0.0:
+        return 1.0
+    urgency = (target - s.latency_headroom_s) / target
+    return 1.0 + min(max(urgency, 0.0), ELASTIC_BID_MAX - 1.0)
+
+
 def compute_bid(t: Tenant, s: Optional[TenantSignals] = None) -> float:
-    """Per-interval bid: bid_weight (default weight) x unmet demand."""
+    """Per-interval bid: bid_weight (default weight) x unmet demand,
+    scaled by the ``slo_elastic`` urgency factor when the tenant opted in."""
     unmet = s.unmet if s is not None else max(0, t.demand - t.alloc)
     w = t.bid_weight if t.bid_weight is not None else t.weight
-    return max(0.0, float(w)) * float(unmet)
+    return max(0.0, float(w)) * bid_elasticity(t, s) * float(unmet)
+
+
+def unit_bid(t: Tenant, s: Optional[TenantSignals] = None) -> float:
+    """Per-NODE bid price (the market engines' money unit): bid_weight
+    (default weight) x the slo_elastic urgency factor. ``compute_bid`` is
+    this price times unmet demand."""
+    w = t.bid_weight if t.bid_weight is not None else t.weight
+    return max(0.0, float(w)) * bid_elasticity(t, s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +167,11 @@ class PolicyEngine:
 
     name = "base"
     demand_driven = True
+    # demand-driven engines normally guarantee that nodes only sit free
+    # once every batch tenant's declared demand is covered; budget engines
+    # cannot (a broke tenant may be unable to BUY coverage), so they unset
+    # this and the service relaxes the corresponding invariant check
+    demand_satiating = True
     stateful = False
 
     def __init__(self):
@@ -187,8 +228,23 @@ class PolicyEngine:
         if len(self.plan_samples) < STATE_SAMPLES_MAX:
             self.plan_samples.append(self.last_plan)
 
-    def note_reclaimed(self, victim: str, n: int):
-        """The service reports nodes actually taken from a plan victim."""
+    def reclaim_cap(self, victim: Tenant, take: int, claimant: Tenant
+                    ) -> int:
+        """Apply-time cap on one plan step (called by the service with the
+        live ``take`` right before the victim's release hook runs). The
+        default engine imposes nothing extra; budget engines cap at what
+        the claimant can still afford at this victim's price."""
+        return take
+
+    def note_reclaimed(self, victim: str, n: int,
+                       granted: Optional[int] = None):
+        """The service reports nodes actually taken from a plan victim.
+
+        ``n`` is the victim's full release (drain statistics); ``granted``
+        is how many of them the claimant actually received — a victim may
+        over-release (e.g. a trainer shrinking by whole DP groups), and
+        the surplus flows back to the free pool, so money engines must
+        charge on ``granted``, never ``n``. Defaults to ``n``."""
         if n <= 0:
             return
         self.victim_counts[victim] = self.victim_counts.get(victim, 0) + 1
@@ -328,9 +384,19 @@ class SLOHeadroomEngine(PolicyEngine):
         plan: List[ReclaimStep] = []
         # band 1: free surplus above demand, most headroom first (demand
         # comes from the CMS signal — latency demand is not mirrored on the
-        # registry record, which only tracks batch demand)
+        # registry record, which only tracks batch demand). The WS proxy
+        # headroom clamps at zero, so replica-short tenants tie with
+        # exactly-met ones; the RELATIVE-shortfall tiebreak (shortfall as a
+        # fraction of demand — the quantity the pre-clamp proxy scaled by)
+        # keeps the most relatively starved department drained LAST in
+        # band 3, preserving the pre-clamp protection order.
+        def shortfall_frac(t):
+            s = sig[t.name]
+            return s.queue_depth / max(s.demand, 1)
+
         by_headroom = sorted(
             latency, key=lambda t: (-sig[t.name].latency_headroom_s,
+                                    shortfall_frac(t),
                                     -t.priority))
         surplus_taken: Dict[str, int] = {}
         for v in by_headroom:
@@ -390,6 +456,7 @@ class AuctionEngine(PolicyEngine):
         self.price_max = 0.0
         self.price_samples: List[float] = []
         self.last_bids: Dict[str, float] = {}
+        self.last_clearing_price: Optional[float] = None
         self.reclaim_price_sum = 0.0
         self.reclaim_price_n = 0
 
@@ -397,8 +464,24 @@ class AuctionEngine(PolicyEngine):
         self.intervals += 1
         self.price_sum += price
         self.price_max = max(self.price_max, price)
+        self.last_clearing_price = price
         if len(self.price_samples) < STATE_SAMPLES_MAX:
             self.price_samples.append(price)
+
+    def _note_reclaim_price(self, plan: List[ReclaimStep],
+                            prices: Dict[str, float], deficit: int):
+        """Record the claim's clearing price: the marginal victim bid
+        needed to cover the deficit (0 when the chain cannot cover it)."""
+        need, price = deficit, 0.0
+        for step in plan:
+            if need <= 0:
+                break
+            price = prices[step.victim]
+            need -= step.take
+        if need > 0:
+            price = 0.0          # chain cannot cover the deficit: no clear
+        self.reclaim_price_sum += price
+        self.reclaim_price_n += 1
 
     def plan_reclaim(self, deficit, tenants, claimant):
         batch, latency = self.eligible_victims(tenants, claimant)
@@ -411,18 +494,7 @@ class AuctionEngine(PolicyEngine):
         plan = [ReclaimStep(v.name, self.reclaimable(v),
                             f"bid={bids[v.name]:.2f}")
                 for v in victims if self.reclaimable(v) > 0]
-        # the marginal bid needed to cover the deficit is the claim's
-        # clearing price (0 when the chain cannot cover it)
-        need, price = deficit, 0.0
-        for step in plan:
-            if need <= 0:
-                break
-            price = bids[step.victim]
-            need -= step.take
-        if need > 0:
-            price = 0.0          # chain cannot cover the deficit: no clear
-        self.reclaim_price_sum += price
-        self.reclaim_price_n += 1
+        self._note_reclaim_price(plan, bids, deficit)
         self._note_plan(plan)
         return plan
 
@@ -461,12 +533,192 @@ class AuctionEngine(PolicyEngine):
         return out
 
 
+class BudgetAuctionEngine(AuctionEngine):
+    """Budget-constrained market engine, first-price clearing (the ROADMAP
+    market item: budgets spendable over time + SLO-elastic bids).
+
+    Every tenant starts with ``budget`` tokens (None = unlimited), held in
+    a :class:`~repro.core.types.MarketState` that the engine threads
+    through both phases and serializes into ``policy_state["market"]``.
+    Bids are per-NODE prices: ``bid_weight`` (default ``weight``), scaled
+    by the ``slo_elastic`` urgency factor when the tenant opted in.
+
+    Phase 2 sells idle nodes per interval: highest per-node bidders first,
+    each capped at unmet demand AND at what it can afford at its own bid;
+    every winner pays the interval's *clearing price* per node — the
+    lowest winning bid (the winning side's "first price") — debited from
+    its budget. A broke tenant wins nothing and erodes toward its floor.
+
+    Phase 1 (urgent claims) drains victims in ascending per-node-bid
+    order, batch before latency, floors respected; the claimant pays each
+    victim's per-node bid for every node it RECEIVES beyond its own floor
+    entitlement (nodes up to ``floor`` are a free guarantee — a broke
+    claimant "falls back to its floor"; an over-releasing victim's
+    surplus reflows to the free pool unpaid and is sold there instead).
+    The plan lists every victim at its full floor-capped take — the same
+    under-release resilience as the plain auction — and affordability is
+    enforced exactly at APPLY time: the service asks ``reclaim_cap`` for
+    each step's allowance against the claimant's LIVE remaining budget,
+    and the debit lands in ``note_reclaimed`` at the same price, so
+    budgets can never be overspent and a victim that refuses to release
+    never starves affordable victims later in the plan.
+    """
+
+    name = "budget_auction"
+    demand_satiating = False
+
+    def __init__(self):
+        super().__init__()
+        self.market = MarketState()
+        self.last_unit_bids: Dict[str, float] = {}
+        # pending-claim charge book: per-victim per-node prices + the
+        # claimant's free floor quota, consumed by reclaim_cap /
+        # note_reclaimed as the service applies the plan step by step
+        self._claimant: Optional[str] = None
+        self._claim_prices: Dict[str, float] = {}
+        self._claim_free_left = 0
+
+    def _sync_market(self, tenants: Sequence[Tenant]):
+        for t in tenants:
+            self.market.register(t.name, getattr(t, "budget", None))
+
+    def _record_price(self, price: float):
+        super()._record_price(price)
+        self.market.note_price(price)
+
+    # ------------------------------------------------------------- phase 1
+    def plan_reclaim(self, deficit, tenants, claimant):
+        self._sync_market(tenants)
+        batch, latency = self.eligible_victims(tenants, claimant)
+        sig = {t.name: tenant_signals(t) for t in tenants}
+        prices = {t.name: unit_bid(t, sig[t.name]) for t in tenants}
+        self.last_bids = {n: s.bid for n, s in sig.items()}
+        self.last_unit_bids.update(prices)
+        victims = sorted(
+            batch + latency,
+            key=lambda t: (0 if t.kind == "batch" else 1, prices[t.name],
+                           -t.priority))
+        plan = [ReclaimStep(v.name, self.reclaimable(v),
+                            f"price={prices[v.name]:.2f}")
+                for v in victims if self.reclaimable(v) > 0]
+        # open the claim's charge book: nodes up to the claimant's floor
+        # are free; everything further is capped and debited at apply time
+        self._claimant = claimant.name
+        self._claim_prices = {s.victim: prices[s.victim] for s in plan}
+        self._claim_free_left = max(0, claimant.floor - claimant.alloc)
+        self._note_reclaim_price(plan, prices, deficit)
+        self._note_plan(plan)
+        return plan
+
+    def reclaim_cap(self, victim, take, claimant):
+        """Live affordability cap for one plan step: the claimant's free
+        floor quota plus what its remaining budget buys at this victim's
+        per-node price (previous steps' debits already reflected)."""
+        if self._claimant != claimant.name or \
+                victim.name not in self._claim_prices:
+            return take
+        price = self._claim_prices[victim.name]
+        can_pay = self.market.affordable_nodes(claimant.name, price)
+        return min(take, self._claim_free_left + can_pay)
+
+    def note_reclaimed(self, victim: str, n: int,
+                       granted: Optional[int] = None):
+        super().note_reclaimed(victim, n, granted)
+        granted = n if granted is None else granted
+        if granted <= 0 or self._claimant is None or \
+                victim not in self._claim_prices:
+            return
+        # free floor-entitled nodes first (apply order == plan order),
+        # then charge the claimant at this victim's per-node bid — only
+        # for nodes it actually received (an over-releasing victim's
+        # surplus reflows to the free pool and is sold there, not here)
+        free_used = min(self._claim_free_left, granted)
+        self._claim_free_left -= free_used
+        paid = granted - free_used
+        if paid > 0:
+            price = self._claim_prices[victim]
+            # a victim over-releasing past the reclaim_cap (DP-group
+            # rounding) can hand the claimant more than it can afford;
+            # the debit clamps at the live budget so it can never go
+            # negative — the bounded excess rides free
+            paid = min(paid, self.market.affordable_nodes(
+                self._claimant, price))
+            if paid > 0:
+                self.market.debit(self._claimant, paid, price, "reclaim",
+                                  self.intervals)
+
+    # ------------------------------------------------------------- phase 2
+    def _clearing_price(self, winner_prices: List[float],
+                        loser_prices: List[float]) -> float:
+        """First-price clearing: the lowest winning per-node bid."""
+        return min(winner_prices) if winner_prices else 0.0
+
+    def idle_grants(self, free, batch):
+        self._sync_market(batch)
+        sig = {t.name: tenant_signals(t) for t in batch}
+        prices = {t.name: unit_bid(t, sig[t.name]) for t in batch}
+        self.last_bids.update({n: s.bid for n, s in sig.items()})
+        self.last_unit_bids.update(prices)
+        order = sorted(batch, key=lambda t: (-prices[t.name], t.priority))
+        grants: Dict[str, int] = {}
+        winner_prices: List[float] = []
+        loser_prices: List[float] = []
+        remaining = free
+        for t in order:
+            want = max(0, t.demand - t.alloc)
+            if want <= 0:
+                continue
+            # affordability is judged at the tenant's own bid; the actual
+            # debit happens at the clearing price, which never exceeds it
+            can_pay = self.market.affordable_nodes(t.name, prices[t.name])
+            give = min(want, can_pay, remaining)
+            if give > 0:
+                grants[t.name] = give
+                winner_prices.append(prices[t.name])
+                remaining -= give
+            if give < min(want, can_pay):
+                loser_prices.append(prices[t.name])
+        if grants:
+            price = self._clearing_price(winner_prices, loser_prices)
+            self._record_price(price)
+            for name, n in grants.items():
+                self.market.debit(name, n, price, "idle", self.intervals)
+        return [(t, grants[t.name]) for t in batch if grants.get(t.name)]
+
+    def state_snapshot(self) -> Dict:
+        out = super().state_snapshot()
+        out["market"] = self.market.snapshot()
+        out["last_unit_bids"] = dict(self.last_unit_bids)
+        return out
+
+
+class SecondPriceEngine(BudgetAuctionEngine):
+    """Vickrey variant of :class:`BudgetAuctionEngine`: idle winners pay
+    the highest LOSING per-node bid (0 when every bidder is fully served).
+
+    Truthful ``bid_weight``s become dominant for the idle sale: a fully
+    served winner's payment is set by the best rejected bid, not its own,
+    so inflating a bid can only change *whether* it wins, never what it
+    pays — pinned by the golden tests. Second-price payments are ≤
+    first-price payments on identical bids (property-tested): the highest
+    losing bid can never exceed the lowest winning one. The reclaim side
+    (budgets, floor entitlements, victim pricing) is inherited unchanged.
+    """
+
+    name = "second_price"
+
+    def _clearing_price(self, winner_prices, loser_prices):
+        return max(loser_prices) if loser_prices else 0.0
+
+
 POLICIES: Dict[str, Callable[[], PolicyEngine]] = {
     PaperPolicy.name: PaperPolicy,
     DemandCappedIdlePolicy.name: DemandCappedIdlePolicy,
     ProportionalSharePolicy.name: ProportionalSharePolicy,
     SLOHeadroomEngine.name: SLOHeadroomEngine,
     AuctionEngine.name: AuctionEngine,
+    BudgetAuctionEngine.name: BudgetAuctionEngine,
+    SecondPriceEngine.name: SecondPriceEngine,
 }
 # alias: the registry IS the engine registry
 ENGINES = POLICIES

@@ -63,6 +63,8 @@ class TenantProvisionService:
             name=spec.name, kind=spec.kind, priority=spec.priority,
             weight=spec.weight, floor=getattr(spec, "floor", 0),
             bid_weight=getattr(spec, "bid_weight", None),
+            budget=getattr(spec, "budget", None),
+            bid_policy=getattr(spec, "bid_policy", "linear"),
             on_grant=on_grant, on_force_release=on_force_release,
             signals=signals))
 
@@ -73,11 +75,13 @@ class TenantProvisionService:
         assert self.free >= 0
         assert all(t.alloc >= 0 for t in self.tenants.values()), \
             {t.name: t.alloc for t in self.tenants.values()}
-        if self.policy.demand_driven:
+        if self.policy.demand_driven and self.policy.demand_satiating:
             # demand-capped invariant: nodes sit free only when every batch
             # tenant's declared demand is already covered (claims only drain
             # `free`, and every demand/release change reruns provision_idle,
-            # so this holds at every quiescent point)
+            # so this holds at every quiescent point). Budget engines unset
+            # demand_satiating: a broke tenant legitimately leaves demand
+            # uncovered while nodes sit free (it cannot pay for them).
             assert self.free == 0 or all(
                 t.alloc >= t.demand for t in self.tenants.values()
                 if t.kind == "batch"), \
@@ -125,6 +129,10 @@ class TenantProvisionService:
                 # node_failed inside an earlier victim's hook may have
                 # shrunk this victim's alloc since the plan was made
                 take = min(short, step.take, self.policy.reclaimable(v))
+                # engine apply-time cap (budget engines: what the claimant
+                # can still afford at this victim's price, live — earlier
+                # steps' debits are already reflected)
+                take = min(take, self.policy.reclaim_cap(v, take, t))
                 if take <= 0:
                     continue
                 if v.on_force_release is not None:
@@ -141,7 +149,8 @@ class TenantProvisionService:
                 t.alloc += give
                 short -= give
                 surplus += got - give
-                self.policy.note_reclaimed(v.name, got)
+                # full release for drain stats, `give` for money engines
+                self.policy.note_reclaimed(v.name, got, granted=give)
         if surplus > 0:
             # over-released nodes go back through the idle policy (they are
             # typically re-granted to the very tenant that shed them)

@@ -79,6 +79,10 @@ class TenantResult:
     reclaimed_events: int = 0
     reclaimed_nodes: int = 0
     last_bid: float = 0.0
+    # market engine accounting: tokens spent over the run and what is left
+    # of the declared budget (None = unlimited or no market engine)
+    spend: float = 0.0
+    budget_remaining: Optional[float] = None
 
     @property
     def benefit(self) -> Dict[str, float]:
@@ -257,6 +261,8 @@ class ConsolidationSim:
                 rt.record.weight = spec.weight
                 rt.record.floor = spec.floor
                 rt.record.bid_weight = spec.bid_weight
+                rt.record.budget = spec.budget
+                rt.record.bid_policy = spec.bid_policy
             else:
                 rt.record = self.svc.register_spec(
                     spec, on_grant=on_grant, on_force_release=on_force)
@@ -425,6 +431,11 @@ class ConsolidationSim:
         res.reclaimed_nodes = engine.victim_nodes.get(rt.name, 0)
         res.last_bid = float(getattr(engine, "last_bids", {})
                              .get(rt.name, 0.0))
+        market = getattr(engine, "market", None)
+        if market is not None:
+            res.spend = float(market.spend.get(rt.name, 0.0))
+            rem = market.remaining.get(rt.name, math.inf)
+            res.budget_remaining = None if math.isinf(rem) else float(rem)
         if rt.is_batch:
             completed = [j for j in rt.jobs if j.state is JobState.COMPLETED]
             tats = sorted(j.turnaround for j in completed)

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
@@ -135,6 +136,85 @@ class TenantSignals:
         return max(0, self.demand - self.alloc)
 
 
+# MarketState.ledger / .clearing_prices retain at most this many samples
+# (aggregates — spend, remaining, transactions — are always exact)
+MARKET_SAMPLES_MAX = 64
+
+
+@dataclass
+class MarketState:
+    """Per-run money bookkeeping of the budget-constrained market engines.
+
+    Tenants declare a ``budget`` (tokens spendable across the horizon;
+    ``None`` = unlimited). The market engines (``budget_auction``,
+    ``second_price`` in core/policies.py) debit it whenever acquiring a
+    node displaces someone else's claim on it: idle purchases at the
+    interval's clearing price, forced reclaims at the displaced victim's
+    per-node bid (beyond the claimant's free ``floor`` entitlement).
+    Nodes granted straight from the free pool are free — nobody was
+    outbid for them. The state is threaded through ``claim()``/
+    ``provision_idle`` (the engine carries it across both phases) and
+    lands, JSON-safe, in ``SimResult.policy_state["market"]`` and the v5
+    campaign artifact.
+    """
+    budgets: Dict[str, Optional[float]] = field(default_factory=dict)
+    remaining: Dict[str, float] = field(default_factory=dict)  # inf = no cap
+    spend: Dict[str, float] = field(default_factory=dict)
+    transactions: int = 0
+    # capped inspection samples; aggregates above are exact
+    ledger: List[Dict] = field(default_factory=list)
+    clearing_prices: List[float] = field(default_factory=list)
+
+    def register(self, name: str, budget: Optional[float]) -> None:
+        """First sight of a tenant: seed its remaining budget. Later calls
+        are no-ops — the pot never refills mid-run."""
+        if name in self.budgets:
+            return
+        self.budgets[name] = None if budget is None else float(budget)
+        self.remaining[name] = math.inf if budget is None else float(budget)
+        self.spend[name] = 0.0
+
+    def affordable_nodes(self, name: str, unit_price: float) -> int:
+        """How many nodes this tenant can pay for at ``unit_price``."""
+        rem = self.remaining.get(name, math.inf)
+        if unit_price <= 0.0 or math.isinf(rem):
+            return 1 << 30
+        return int(math.floor(rem / unit_price + 1e-9))
+
+    def debit(self, name: str, nodes: int, unit_price: float,
+              kind: str, interval: int) -> float:
+        """Charge ``nodes x unit_price`` against the tenant's budget and
+        record it in the (capped) ledger. Returns the cost."""
+        cost = float(nodes) * float(unit_price)
+        if nodes <= 0 or cost <= 0.0:
+            return 0.0
+        self.remaining[name] -= cost          # inf stays inf (unlimited)
+        self.spend[name] = self.spend.get(name, 0.0) + cost
+        self.transactions += 1
+        if len(self.ledger) < MARKET_SAMPLES_MAX:
+            self.ledger.append({"tenant": name, "nodes": int(nodes),
+                                "unit_price": float(unit_price),
+                                "cost": cost, "kind": kind,
+                                "interval": int(interval)})
+        return cost
+
+    def note_price(self, price: float) -> None:
+        if len(self.clearing_prices) < MARKET_SAMPLES_MAX:
+            self.clearing_prices.append(float(price))
+
+    def snapshot(self) -> Dict:
+        """JSON-safe snapshot (unlimited budgets serialize as null)."""
+        return {
+            "budgets": dict(self.budgets),
+            "remaining": {n: (None if math.isinf(v) else v)
+                          for n, v in self.remaining.items()},
+            "spend": dict(self.spend),
+            "transactions": self.transactions,
+            "ledger": [dict(e) for e in self.ledger],
+            "clearing_prices": list(self.clearing_prices),
+        }
+
+
 @dataclass
 class TenantSpec:
     """Declaration of one department (tenant) sharing the cluster.
@@ -165,6 +245,19 @@ class TenantSpec:
     bid_weight: auction engines bid ``bid_weight x unmet demand`` per
     interval; defaults to ``weight`` when unset, so a department can value
     marginal nodes differently from its proportional share.
+
+    budget: tokens this department may spend across the whole horizon
+    under the budget-constrained market engines (``budget_auction``,
+    ``second_price``): idle purchases and forced reclaims debit it (see
+    :class:`MarketState`); once broke the department falls back to its
+    ``floor``. ``None`` = unlimited (every non-market engine ignores it).
+
+    bid_policy: how the per-interval bid is derived from runtime signals —
+    ``"linear"`` (bid_weight x unmet demand, the default) or
+    ``"slo_elastic"`` (the bid rises as latency headroom shrinks: scaled
+    by 1x at full headroom up to 2x at zero headroom and beyond when the
+    SLO is violated, so a department under latency pressure outbids
+    comfortable ones).
     """
     name: str
     kind: str = "batch"                    # "batch" | "latency"
@@ -172,6 +265,8 @@ class TenantSpec:
     weight: float = 1.0
     floor: int = 0
     bid_weight: Optional[float] = None
+    budget: Optional[float] = None
+    bid_policy: str = "linear"             # "linear" | "slo_elastic"
     # demand sources --------------------------------------------------
     jobs: Optional[List["Job"]] = None     # batch: HPC job trace
     demand: object = None                  # latency: [(t, n), ...] or provider
@@ -179,6 +274,7 @@ class TenantSpec:
 
     def __post_init__(self):
         assert self.kind in ("batch", "latency"), self.kind
+        assert self.bid_policy in ("linear", "slo_elastic"), self.bid_policy
 
 
 class EventKind(enum.Enum):

@@ -19,7 +19,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cms import CMSBase
+from repro.core.cms import CMSBase, proxy_headroom_s
 from repro.core.types import SimConfig, SLOConfig, TenantSignals
 
 UTIL_WINDOW_S = 20.0
@@ -113,16 +113,15 @@ class WSServer(CMSBase):
 
     def latency_headroom_s(self) -> float:
         """Seconds of slack to the SLO target. With a real observation this
-        is ``target - observed``; otherwise a surplus proxy: spare replicas
-        scale the target positively, shortfall negatively (a department
-        already short on replicas has no headroom to give)."""
+        is ``target - observed`` (negative = measured violation); otherwise
+        the shared zero-clamped surplus proxy (``cms.proxy_headroom_s`` —
+        an unclamped negative prediction made slo_elastic bids overshoot;
+        the shortfall already drives ``queue_depth``/``unmet``, so it must
+        not be double-counted as urgency)."""
         target = self.slo.latency_target_s if self.slo else 0.0
         if self.observed_latency_s is not None:
             return target - self.observed_latency_s
-        surplus = self.alloc - self.demand
-        if target <= 0.0:
-            return float(surplus)
-        return target * surplus / max(self.demand, 1)
+        return proxy_headroom_s(self.alloc, self.demand, target)
 
     def signals(self, now: float, name: str = "",
                 weight: float = 1.0) -> TenantSignals:

@@ -23,6 +23,7 @@ from __future__ import annotations
 import math
 from typing import Dict, List, Optional
 
+from repro.core.cms import proxy_headroom_s
 from repro.core.provision import (ResourceProvisionService,
                                   TenantProvisionService)
 from repro.core.types import TenantSignals, TenantSpec
@@ -79,7 +80,8 @@ class MultiTenantOrchestrator:
     # ------------------------------------------------------------ registry
     def add_batch(self, name: str, trainer: ElasticTrainer, *,
                   priority: int = 1, weight: float = 1.0,
-                  min_devices: int = 0, bid_weight: Optional[float] = None
+                  min_devices: int = 0, bid_weight: Optional[float] = None,
+                  budget: Optional[float] = None, bid_policy: str = "linear"
                   ) -> None:
         assert not self._started, "register departments before start()"
         dept = _BatchDept(name, trainer, min_devices)
@@ -87,7 +89,8 @@ class MultiTenantOrchestrator:
         self.devs.add_group(name)
         self.svc.register_spec(
             TenantSpec(name, "batch", priority=priority, weight=weight,
-                       floor=dept.min_devices, bid_weight=bid_weight),
+                       floor=dept.min_devices, bid_weight=bid_weight,
+                       budget=budget, bid_policy=bid_policy),
             on_grant=lambda n, d=dept: self._grant_batch(d, n),
             on_force_release=lambda n, d=dept: self._force_release_batch(
                 d, n),
@@ -96,16 +99,25 @@ class MultiTenantOrchestrator:
     def add_latency(self, name: str, pool: ServingPool, *,
                     priority: int = 0, weight: float = 1.0,
                     slo_autoscaler=None, floor: int = 0,
-                    bid_weight: Optional[float] = None) -> None:
+                    bid_weight: Optional[float] = None,
+                    budget: Optional[float] = None,
+                    bid_policy: str = "linear") -> None:
         assert not self._started, "register departments before start()"
         self.latency[name] = _LatencyDept(name, pool, slo_autoscaler)
         self.devs.add_group(name)
         self.svc.register_spec(
             TenantSpec(name, "latency", priority=priority, weight=weight,
-                       floor=floor, bid_weight=bid_weight),
+                       floor=floor, bid_weight=bid_weight,
+                       budget=budget, bid_policy=bid_policy),
             on_force_release=lambda n, nm=name: self._force_release_latency(
                 nm, n),
             signals=lambda nm=name: self._latency_signals(nm))
+
+    def market_state(self) -> Optional[Dict]:
+        """JSON-safe market snapshot (budgets, remaining, spend ledger,
+        clearing prices) when a budget engine is active, else None."""
+        market = getattr(self.svc.policy, "market", None)
+        return None if market is None else market.snapshot()
 
     # ------------------------------------------------------------- signals
     def observe_latency(self, name: str, latency_s: float) -> None:
@@ -122,10 +134,9 @@ class MultiTenantOrchestrator:
         if dept.observed_latency_s is not None and target > 0.0:
             headroom = target - dept.observed_latency_s
         else:
-            # surplus proxy (same fallback as the simulator's WS CMS)
-            surplus = rec.alloc - dept.demand
-            headroom = (target * surplus / max(dept.demand, 1)
-                        if target > 0.0 else float(surplus))
+            # the simulator WS CMS's zero-clamped surplus proxy, shared so
+            # runtime and simulated slo_elastic bids can never diverge
+            headroom = proxy_headroom_s(rec.alloc, dept.demand, target)
         return TenantSignals(
             name=name, kind="latency", alloc=rec.alloc, demand=dept.demand,
             weight=rec.weight, latency_headroom_s=headroom,

@@ -54,7 +54,7 @@ from repro.workloads.arrivals import GENERATORS, make_trace
 from repro.workloads.autoscaler import RequestWorkload
 from repro.workloads.queueing import counters_delta, snapshot_counters
 
-SCHEMA = "phoenix-campaign-v4"
+SCHEMA = "phoenix-campaign-v5"
 
 # department mixes: name -> (n_hpc, n_ws, n_best_effort)
 MIXES: Dict[str, tuple] = {
@@ -78,6 +78,9 @@ class ScenarioCell:
     st_max_nodes: int = 32       # batch-trace size calibration
     policy: str = "paper"        # key into core.policies.POLICIES
     mix: str = "paper2"          # key into MIXES
+    # per-department market budget (tokens over the horizon); 0 = unlimited.
+    # When set, latency departments bid slo_elastic (v5 market axis).
+    budget: float = 0.0
     seed: int = 0
 
     def cell_id(self) -> str:
@@ -92,7 +95,8 @@ class ScenarioCell:
         defaults = {f.name: f.default for f in dataclasses.fields(self)}
         extra = [(tag, getattr(self, name))
                  for tag, name in (("r", "rate_rps"), ("h", "horizon_s"),
-                                   ("j", "n_jobs"), ("x", "st_max_nodes"))
+                                   ("j", "n_jobs"), ("x", "st_max_nodes"),
+                                   ("b", "budget"))
                  if getattr(self, name) != defaults[name]]
         if extra:
             base += "".join(f"-{tag}{v:g}" if isinstance(v, float)
@@ -122,7 +126,7 @@ REDUCE_KEYS = tuple(k for k in METRIC_KEYS
                     if k not in ("queue_sim_s", "wall_s"))
 # axes a reduction marginalizes over
 AXIS_KEYS = ("preempt", "scheduler", "arrival", "total_nodes",
-             "slo_target_s", "policy", "mix")
+             "slo_target_s", "policy", "mix", "budget")
 
 
 def _policy_axis(policies: Optional[Sequence[str]],
@@ -138,10 +142,21 @@ def _policy_axis(policies: Optional[Sequence[str]],
 
 
 def make_grid(name: str, seed: int = 0,
-              policies: Optional[Sequence[str]] = None) -> List[ScenarioCell]:
+              policies: Optional[Sequence[str]] = None,
+              budget: float = 0.0) -> List[ScenarioCell]:
     """Named grids. `tiny` is the CI smoke grid (8 cells, < 60 s serial);
     `mix_tiny` smokes the policy x department-mix matrix. ``policies``
-    overrides each grid's policy axis (CLI ``--policy a,b,c``)."""
+    overrides each grid's policy axis (CLI ``--policy a,b,c``);
+    ``budget`` sets every cell's per-department market budget (CLI
+    ``--budget``, 0 = unlimited)."""
+    cells = _make_grid_cells(name, seed, policies)
+    if budget:
+        cells = [dataclasses.replace(c, budget=budget) for c in cells]
+    return cells
+
+
+def _make_grid_cells(name: str, seed: int,
+                     policies: Optional[Sequence[str]]) -> List[ScenarioCell]:
     if name == "tiny":
         pols = _policy_axis(policies, ["paper"])
         return [ScenarioCell(preempt=p, scheduler="first_fit", arrival=a,
@@ -214,12 +229,18 @@ def make_tenants(cell: ScenarioCell) -> List[TenantSpec]:
     trace, WS departments split the request rate, an optional best-effort
     batch tenant rides at the lowest priority."""
     n_hpc, n_ws, n_be = MIXES[cell.mix]
+    # market axis (v5): a finite budget makes every department pay for
+    # nodes under the budget engines; latency departments then also bid
+    # slo_elastic so urgency shapes the clearing prices
+    budget = cell.budget if cell.budget > 0 else None
+    bid_policy = "slo_elastic" if budget is not None else "linear"
     specs: List[TenantSpec] = []
     for i in range(n_ws):
         trace = make_trace(cell.arrival, cell.rate_rps / n_ws,
                            cell.horizon_s, cell.seed + 101 * i)
         specs.append(TenantSpec(
             f"ws-{i}", "latency", priority=i,
+            budget=budget, bid_policy=bid_policy,
             slo=SLOConfig(latency_target_s=cell.slo_target_s),
             demand=RequestWorkload(
                 trace=trace, model=ServiceTimeModel(),
@@ -231,14 +252,15 @@ def make_tenants(cell: ScenarioCell) -> List[TenantSpec]:
                                    max_nodes=cell.st_max_nodes)
         specs.append(TenantSpec(
             f"hpc-{i}", "batch", priority=n_ws + i,
-            weight=float(n_hpc - i), jobs=jobs))
+            weight=float(n_hpc - i), budget=budget, jobs=jobs))
     for i in range(n_be):
         jobs = synthetic_sdsc_blue(seed=cell.seed + 997 + i,
                                    n_jobs=max(1, cell.n_jobs // 4),
                                    horizon=cell.horizon_s,
                                    max_nodes=max(4, cell.st_max_nodes // 4))
         specs.append(TenantSpec(
-            f"be-{i}", "batch", priority=100 + i, weight=0.5, jobs=jobs))
+            f"be-{i}", "batch", priority=100 + i, weight=0.5,
+            budget=budget, jobs=jobs))
     return specs
 
 
@@ -314,10 +336,13 @@ def run_cell(cell: ScenarioCell) -> Dict:
                "avg_alloc": t.avg_alloc,
                "reclaimed_events": t.reclaimed_events,
                "reclaimed_nodes": t.reclaimed_nodes,
-               "last_bid": t.last_bid, **t.benefit}
+               "last_bid": t.last_bid,
+               "spend": t.spend,
+               "budget_remaining": t.budget_remaining, **t.benefit}
         for name, t in res.tenants.items()}
-    # v4: per-cell engine state — reclaim orderings taken and (auction)
-    # clearing prices, straight from the engine's snapshot
+    # v4+: per-cell engine state — reclaim orderings taken and (auction)
+    # clearing prices; v5 adds the market ledger (budgets, remaining,
+    # spend, clearing prices) for the budget engines
     out["policy_state"] = res.policy_state
     return out
 
@@ -566,6 +591,9 @@ def _main_run(argv) -> int:
     ap.add_argument("--policy", default=None, metavar="P1,P2,...",
                     help="override the grid's policy axis with this "
                          f"comma-separated subset of {sorted(POLICIES)}")
+    ap.add_argument("--budget", type=float, default=0.0,
+                    help="per-department market budget (tokens over the "
+                         "horizon) for the budget engines; 0 = unlimited")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="campaign.json")
@@ -584,7 +612,8 @@ def _main_run(argv) -> int:
         spool = f"{args.out}{tag}.spool.jsonl"
 
     policies = args.policy.split(",") if args.policy else None
-    cells = make_grid(args.grid, seed=args.seed, policies=policies)
+    cells = make_grid(args.grid, seed=args.seed, policies=policies,
+                      budget=args.budget)
     art = run_campaign(cells, workers=args.workers, out_path=args.out,
                        grid_name=args.grid, spool_path=spool,
                        resume=args.resume, shard=args.shard)
@@ -603,14 +632,16 @@ def _main_merge(argv) -> int:
                     help="order/verify rows against this named grid")
     ap.add_argument("--policy", default=None, metavar="P1,P2,...",
                     help="the --policy subset the shards ran with")
+    ap.add_argument("--budget", type=float, default=0.0,
+                    help="the --budget the shards ran with")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--allow-partial", action="store_true",
                     help="merge even if grid cells are missing")
     args = ap.parse_args(argv)
 
     policies = args.policy.split(",") if args.policy else None
-    grid_cells = make_grid(args.grid, seed=args.seed,
-                           policies=policies) if args.grid else None
+    grid_cells = make_grid(args.grid, seed=args.seed, policies=policies,
+                           budget=args.budget) if args.grid else None
     art, missing = merge_spools(args.spools, grid_cells=grid_cells,
                                 grid_name=args.grid or "merged")
     if missing:

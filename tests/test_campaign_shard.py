@@ -5,14 +5,15 @@ single-shot artifact's reductions *exactly*, and --resume must re-execute
 only the missing cells.
 """
 import dataclasses
+import hashlib
 import json
 
 import pytest
 
-from repro.workloads.campaign import (REDUCE_KEYS, ScenarioCell, make_grid,
-                                      merge_spools, reduce_metrics,
-                                      run_campaign, shard_cells,
-                                      spool_append, spool_load)
+from repro.workloads.campaign import (REDUCE_KEYS, SCHEMA, ScenarioCell,
+                                      make_grid, merge_spools,
+                                      reduce_metrics, run_campaign,
+                                      shard_cells, spool_append, spool_load)
 
 # a fast 4-cell grid (short horizon) for end-to-end runs
 FAST_CELLS = [
@@ -36,12 +37,12 @@ def test_cell_key_covers_all_fields():
                         slo_target_s=30.0)
     for field in ("rate_rps", "horizon_s", "n_jobs", "st_max_nodes",
                   "preempt", "arrival", "total_nodes", "slo_target_s",
-                  "policy", "mix", "seed"):
+                  "policy", "mix", "budget", "seed"):
         bumped = {"rate_rps": 3.5, "horizon_s": 999.0, "n_jobs": 7,
                   "st_max_nodes": 5, "preempt": "checkpoint",
                   "arrival": "mmpp", "total_nodes": 49,
                   "slo_target_s": 31.0, "policy": "demand_capped",
-                  "mix": "2hpc2ws", "seed": 1}[field]
+                  "mix": "2hpc2ws", "budget": 5000.0, "seed": 1}[field]
         other = dataclasses.replace(base, **{field: bumped})
         assert other.cell_key() != base.cell_key(), field
         assert other.cell_id() != base.cell_id(), field
@@ -131,16 +132,83 @@ def test_resume_runs_only_missing_cells(tmp_path):
     assert art2["reductions"] == art["reductions"]
 
 
-def test_run_campaign_writes_v3_artifact(tmp_path):
+def test_run_campaign_writes_v5_artifact(tmp_path):
     out = tmp_path / "c.json"
     art = run_campaign(FAST_CELLS[:2], workers=1, out_path=str(out),
                        grid_name="unit")
     disk = json.loads(out.read_text())
-    assert disk["schema"] == "phoenix-campaign-v4"
+    assert disk["schema"] == "phoenix-campaign-v5"
     assert "throughput" in disk and disk["throughput"]["executed"] == 2
     assert disk["cells"][0]["queue_sim"]["requests"] > 0
     assert disk["cells"][0]["metrics"]["queue_sim_s"] >= 0.0
     assert art["reductions"] == disk["reductions"]
+
+
+# ------------------------------------------------- v5 market artifact path
+
+# market cells: budget engines over the non-degenerate tenant path, short
+# horizon so the end-to-end shard+merge stays fast
+MARKET_CELLS = [
+    ScenarioCell(preempt="kill", scheduler="first_fit", arrival="poisson",
+                 total_nodes=48, slo_target_s=30.0, horizon_s=1800.0,
+                 n_jobs=20, rate_rps=1.0, policy=pol, budget=2000.0)
+    for pol in ("budget_auction", "second_price")
+]
+
+
+def test_merge_refuses_stale_schema_spools(tmp_path):
+    """Spools written under an older artifact schema hash to different
+    cell keys, so a merge against the current grid reports every cell
+    missing instead of silently folding stale rows in."""
+    def old_key(cell):
+        blob = json.dumps({"schema": "phoenix-campaign-v4",
+                           **dataclasses.asdict(cell)}, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    sp = str(tmp_path / "stale.jsonl")
+    for c in FAST_CELLS:
+        spool_append(sp, {"cell_key": old_key(c), "cell_id": c.cell_id(),
+                          "metrics": {"completed": 1}})
+    merged, missing = merge_spools([sp], grid_cells=FAST_CELLS)
+    assert len(missing) == len(FAST_CELLS)
+    assert merged["n_cells"] == 0
+    # while a current-schema spool folds cleanly
+    assert old_key(FAST_CELLS[0]) != FAST_CELLS[0].cell_key()
+    assert SCHEMA == "phoenix-campaign-v5"
+
+
+def test_market_policy_state_survives_shard_merge_bit_for_bit(tmp_path):
+    """The v5 market fields (budgets, spend ledger, clearing prices in
+    per-cell policy_state and spend/budget_remaining in tenant_metrics)
+    must reduce identically through shard+merge and a single-shot run."""
+    single = run_campaign(MARKET_CELLS, workers=1, grid_name="unit")
+    spools = []
+    for i in range(2):
+        sp = str(tmp_path / f"m{i}.jsonl")
+        spools.append(sp)
+        run_campaign(MARKET_CELLS, workers=1, grid_name="unit",
+                     spool_path=sp, shard=f"{i}/2")
+    merged, missing = merge_spools(spools, grid_cells=MARKET_CELLS,
+                                   grid_name="unit")
+    assert missing == []
+    for a, b in zip(single["cells"], merged["cells"]):
+        assert a["cell_key"] == b["cell_key"]
+        # market state bit-for-bit through the JSONL spool round-trip
+        assert json.dumps(a["policy_state"], sort_keys=True, default=float) \
+            == json.dumps(b["policy_state"], sort_keys=True, default=float)
+        assert a["tenant_metrics"] == b["tenant_metrics"]
+        ps = a["policy_state"]
+        assert ps["engine"] in ("budget_auction", "second_price")
+        market = ps["market"]
+        assert market["transactions"] > 0
+        for name, spent in market["spend"].items():
+            declared = market["budgets"][name]
+            assert declared == 2000.0
+            assert 0.0 <= spent <= declared + 1e-6
+        spends = {n: t["spend"] for n, t in a["tenant_metrics"].items()}
+        assert spends == {n: market["spend"].get(n, 0.0)
+                          for n in spends}, a["cell_id"]
+    assert merged["reductions"] == single["reductions"]
 
 
 # ------------------------------------------------- inf-masked reductions
@@ -156,8 +224,9 @@ def _row(key, p99, slo_met=False, unserved=0):
     m["ws_unserved"] = unserved
     return {"preempt": "kill", "scheduler": "first_fit",
             "arrival": "poisson", "total_nodes": 48, "slo_target_s": 30.0,
-            "policy": "paper", "mix": "paper2", "cell_id": key,
-            "cell_key": key, "slo_met": slo_met, "metrics": m}
+            "policy": "paper", "mix": "paper2", "budget": 0.0,
+            "cell_id": key, "cell_key": key, "slo_met": slo_met,
+            "metrics": m}
 
 
 def test_reduce_metrics_masks_inf_and_reports_rate():

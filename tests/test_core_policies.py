@@ -3,7 +3,7 @@ import pytest
 
 from repro.core.provision import ResourceProvisionService
 from repro.core.st_cms import STServer
-from repro.core.types import Job, JobState, SimConfig
+from repro.core.types import Job, JobState, SimConfig, SLOConfig
 from repro.core.ws_cms import WSServer, demand_from_load
 
 import numpy as np
@@ -116,3 +116,38 @@ def test_ws_server_tracks_unmet_demand():
     assert ws.alloc == 3
     ws.set_demand(5, now=10.0)     # 10s with shortfall 2
     assert ws.unmet_node_seconds == pytest.approx(20.0)
+
+
+def test_ws_headroom_proxy_clamps_at_zero_without_latency_feed():
+    """Regression (market PR): a replica shortfall made the surplus proxy
+    predict NEGATIVE headroom, which inflated slo_elastic bids beyond the
+    zero-headroom level — without any measured violation. The proxy must
+    clamp at 0; a real observe_latency feed may still go negative."""
+    from repro.core.policies import Tenant, unit_bid
+
+    ws = WSServer(SimConfig(), request=lambda n: 0,   # nothing ever granted
+                  release=lambda n: None,
+                  slo=SLOConfig(latency_target_s=30.0))
+    ws.set_demand(10, now=0.0)
+    assert ws.alloc == 0                   # shortfall of 10 replicas
+    assert ws.latency_headroom_s() == 0.0  # proxy clamped, not -300
+    sig = ws.signals(0.0, name="ws")
+    assert sig.latency_headroom_s == 0.0
+    assert sig.queue_depth == 10           # shortfall still visible here
+    # slo_elastic bid tops out at the zero-headroom level (2x), instead of
+    # overshooting toward the violation cap on a mere prediction
+    t = Tenant("ws", "latency", priority=0, bid_weight=2.0,
+               bid_policy="slo_elastic")
+    assert unit_bid(t, sig) == pytest.approx(4.0)
+    # surplus still reports positive headroom (scaled by the target)
+    ws.alloc = 15
+    assert ws.latency_headroom_s() == pytest.approx(30.0 * 5 / 10)
+    # a measured violation is real and stays negative
+    ws.observe_latency(45.0)
+    assert ws.latency_headroom_s() == pytest.approx(-15.0)
+    assert unit_bid(t, ws.signals(0.0, name="ws")) == pytest.approx(5.0)
+    # and without an SLO the proxy is the clamped surplus itself
+    ws_no_slo = WSServer(SimConfig(), request=lambda n: 0,
+                         release=lambda n: None)
+    ws_no_slo.set_demand(4, now=0.0)
+    assert ws_no_slo.latency_headroom_s() == 0.0

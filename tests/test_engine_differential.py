@@ -1,0 +1,204 @@
+"""Cross-engine differential test harness.
+
+Runs EVERY engine in the policy registry over a shared pool of randomized
+tenancy scenarios and asserts the universal invariants no engine may break:
+
+  * node conservation: sum of per-tenant allocations + free == total;
+  * floors: forced reclaim never takes a victim below min(floor, alloc);
+  * idle is never granted beyond a batch tenant's unmet declared demand
+    for demand-capped (``demand_driven``) engines;
+  * budgets are never overspent (market engines);
+  * the recorded clearing price never exceeds the interval's highest bid.
+
+Scenarios are generated deterministically from a seed (the fallback
+corpus always runs); when ``hypothesis`` is installed the same runner is
+additionally driven by drawn seeds. Engines are discovered through
+``get_policy``/``POLICIES`` registry iteration, so any future engine gets
+this coverage for free the moment it is registered.
+"""
+import math
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.core.policies import POLICIES, Tenant, get_policy
+from repro.core.provision import TenantProvisionService
+
+# deterministic fallback corpus (always runs, hypothesis or not)
+CORPUS_SEEDS = list(range(10))
+
+
+def build_scenario(seed: int) -> dict:
+    """One randomized tenancy scenario: a cluster, a tenant mix (kinds,
+    priorities, weights, floors, budgets, bid policies) and an op tape."""
+    rng = random.Random(seed)
+    total = rng.randint(12, 160)
+    n = rng.randint(2, 6)
+    rows = []
+    for i in range(n):
+        kind = rng.choice(["batch", "latency"])
+        rows.append({
+            "name": f"t{i}",
+            "kind": kind,
+            "priority": rng.randint(0, 5),
+            "weight": round(rng.uniform(0.0, 4.0), 2),
+            "bid_weight": rng.choice(
+                [None, round(rng.uniform(0.0, 6.0), 2)]),
+            "floor": rng.randint(0, 6) if kind == "latency" else 0,
+            "budget": rng.choice(
+                [None, round(rng.uniform(0.0, 60.0), 1),
+                 round(rng.uniform(60.0, 2000.0), 1)]),
+            "bid_policy": rng.choice(["linear", "slo_elastic"]),
+        })
+    # the ops need at least one of each kind to exercise both phases
+    if not any(r["kind"] == "latency" for r in rows):
+        rows[0]["kind"] = "latency"
+        rows[0]["floor"] = rng.randint(0, 6)
+    if not any(r["kind"] == "batch" for r in rows):
+        rows[-1]["kind"] = "batch"
+        rows[-1]["floor"] = 0
+    ops = [(rng.choice(["claim", "release", "demand", "fail", "repair"]),
+            rng.randrange(n), rng.randint(0, 100))
+           for _ in range(50)]
+    return {"total": total, "rows": rows, "ops": ops}
+
+
+def run_scenario(policy_name: str, scen: dict):
+    """Execute one scenario under one engine, auditing every invariant
+    after every op (and inside every idle-grant decision)."""
+    svc = TenantProvisionService(scen["total"], policy=policy_name)
+    engine = svc.policy
+    market = getattr(engine, "market", None)
+
+    # --- wrap phase 2 so per-grant invariants are checked at decision time
+    orig_idle = engine.idle_grants
+
+    def audited_idle(free, batch):
+        grants = orig_idle(free, batch)
+        total_granted = 0
+        for t, give in grants:
+            assert give > 0, (engine.name, t.name, give)
+            if engine.demand_driven:
+                # demand-capped engines never grant beyond unmet demand
+                assert give <= max(0, t.demand - t.alloc), \
+                    (engine.name, t.name, give, t.demand, t.alloc)
+            total_granted += give
+        assert total_granted <= free, (engine.name, total_granted, free)
+        price = getattr(engine, "last_clearing_price", None)
+        if grants and price is not None:
+            bids = getattr(engine, "last_unit_bids", None) or \
+                getattr(engine, "last_bids", {})
+            if bids:
+                assert price <= max(bids.values()) + 1e-9, \
+                    (engine.name, price, bids)
+        return grants
+
+    engine.idle_grants = audited_idle
+
+    tenants = []
+    for r in scen["rows"]:
+        hook = (lambda name: lambda k: min(k, svc.tenants[name].alloc))(
+            r["name"]) if r["kind"] == "batch" else None
+        tenants.append(svc.register(Tenant(
+            r["name"], r["kind"], priority=r["priority"],
+            weight=r["weight"], bid_weight=r["bid_weight"],
+            floor=r["floor"], budget=r["budget"],
+            bid_policy=r["bid_policy"], on_force_release=hook)))
+
+    def audit():
+        svc.check()
+        assert sum(t.alloc for t in tenants) + svc.free == svc.total
+        assert svc.free >= 0
+        assert all(t.alloc >= 0 for t in tenants)
+        if market is not None:
+            for name, rem in market.remaining.items():
+                assert rem >= -1e-6, (engine.name, name, rem)
+                declared = market.budgets[name]
+                if declared is not None:
+                    assert market.spend[name] <= declared + 1e-6, \
+                        (engine.name, name, market.spend[name], declared)
+
+    repairs_due = 0
+    for op, ti, amount in scen["ops"]:
+        t = tenants[ti % len(tenants)]
+        if op == "claim" and t.kind == "latency":
+            before = {x.name: x.alloc for x in tenants if x.name != t.name}
+            got = svc.claim(t.name, amount)
+            assert 0 <= got <= amount
+            for x in tenants:
+                if x.name != t.name:
+                    # floors hold for every victim class
+                    assert x.alloc >= min(x.floor, before[x.name]), \
+                        (engine.name, x.name, x.alloc, x.floor,
+                         before[x.name])
+        elif op == "release":
+            svc.release(t.name, amount)
+        elif op == "demand" and t.kind == "batch":
+            svc.set_demand(t.name, amount % 64)
+        elif op == "fail":
+            if svc.total > max(1, scen["total"] // 2):
+                svc.node_failed(t.name)      # may reattribute
+                repairs_due += 1
+        elif op == "repair" and repairs_due > 0:
+            svc.node_repaired()
+            repairs_due -= 1
+        audit()
+    return svc
+
+
+def test_registry_iteration_covers_all_engines():
+    """The harness (and anything else iterating the registry) sees every
+    engine, and each resolves through get_policy with the full two-phase
+    interface."""
+    assert len(POLICIES) >= 7
+    for name in POLICIES:
+        eng = get_policy(name)
+        assert eng.name == name
+        assert callable(eng.plan_reclaim) and callable(eng.idle_grants)
+        assert hasattr(eng, "demand_driven")
+        assert hasattr(eng, "demand_satiating")
+        assert isinstance(eng.state_snapshot(), dict)
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@pytest.mark.parametrize("seed", CORPUS_SEEDS)
+def test_engine_differential_corpus(policy, seed):
+    """Deterministic fallback corpus: every registered engine over the
+    shared scenario pool."""
+    run_scenario(policy, build_scenario(seed))
+
+
+def test_engines_agree_on_totals_across_corpus():
+    """Differential cross-check: whatever the engine, the same scenario
+    ends with the same cluster size and non-negative books — and the
+    unlimited-budget market engines never charge more than an infinite
+    bankroll can absorb (spend is finite)."""
+    for seed in CORPUS_SEEDS[:4]:
+        scen = build_scenario(seed)
+        totals = {}
+        for policy in sorted(POLICIES):
+            svc = run_scenario(policy, scen)
+            totals[policy] = svc.total
+            market = getattr(svc.policy, "market", None)
+            if market is not None:
+                assert all(math.isfinite(v) for v in market.spend.values())
+        assert len(set(totals.values())) == 1, totals
+
+
+if not HAS_HYPOTHESIS:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_engine_differential_hypothesis():
+        pass
+else:
+    @given(policy=st.sampled_from(sorted(POLICIES)),
+           seed=st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_engine_differential_hypothesis(policy, seed):
+        """Hypothesis widens the corpus: same runner, drawn seeds."""
+        run_scenario(policy, build_scenario(seed))

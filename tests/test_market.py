@@ -1,0 +1,411 @@
+"""Budget-constrained market engines: goldens, Vickrey properties, plumbing.
+
+Covers the market subsystem built on the two-phase PolicyEngine:
+  * golden regression: `budget_auction` spend ledgers and `second_price`
+    clearing prices pinned on a small fixed scenario (the market analogue
+    of the paper-engine goldens in tests/test_tenancy.py);
+  * Vickrey properties: second-price payments <= first-price on identical
+    bids, and a fully served winner's payment is independent of its own
+    bid (truthful bid_weights dominant);
+  * budget semantics: broke tenants fall back to their floor on both the
+    idle-purchase and urgent-claim side; budgets are never overspent;
+  * slo_elastic bids rise as latency headroom shrinks (and are capped);
+  * MarketState reaches SimResult.policy_state / TenantResult and the
+    runtime orchestrator's market_state().
+"""
+import math
+import random
+
+import pytest
+
+from repro.core.policies import (BudgetAuctionEngine, POLICIES,
+                                 SecondPriceEngine, Tenant, compute_bid,
+                                 get_policy, unit_bid)
+from repro.core.provision import TenantProvisionService
+from repro.core.types import MarketState, TenantSignals, TenantSpec
+
+
+def _hook(svc, name):
+    """Standard batch release hook: give up to what we hold."""
+    return lambda n: min(n, svc.tenants[name].alloc)
+
+
+def _market_svc(policy, total=10, *, a_bid=3.0, a_budget=20.0,
+                b_budget=5.0, c_budget=10.0):
+    """The fixed golden scenario: two batch buyers + one latency claimant.
+
+    A bids 3/node with 20 tokens, B bids 1/node with 5 tokens, C (latency,
+    floor 1) holds 10 tokens for urgent claims.
+    """
+    svc = TenantProvisionService(total, policy=policy)
+    svc.register(Tenant("A", "batch", priority=1, weight=2.0,
+                        bid_weight=a_bid, budget=a_budget,
+                        on_force_release=_hook(svc, "A")))
+    svc.register(Tenant("B", "batch", priority=2, weight=1.0,
+                        bid_weight=1.0, budget=b_budget,
+                        on_force_release=_hook(svc, "B")))
+    svc.register(Tenant("C", "latency", priority=0, floor=1,
+                        budget=c_budget))
+    return svc
+
+
+# ---------------------------------------------------------------- goldens
+
+def test_budget_auction_golden_spend_ledger():
+    """Pinned first-price run: idle sale clears at the lowest winning bid,
+    the urgent claim pays each victim's bid beyond the floor entitlement."""
+    svc = _market_svc("budget_auction")
+    svc.set_demand("A", 6, provision=False)
+    svc.set_demand("B", 4, provision=False)
+    svc.provision_idle()
+    m = svc.policy.market
+    # A (bid 3) is served first, B (bid 1) second; clearing = lowest
+    # winning bid = 1; both pay 1/node
+    assert svc.tenants["A"].alloc == 6 and svc.tenants["B"].alloc == 4
+    assert svc.policy.price_samples == [pytest.approx(1.0)]
+    assert m.spend == {"A": pytest.approx(6.0), "B": pytest.approx(4.0)}
+    assert m.remaining["A"] == pytest.approx(14.0)
+    assert m.remaining["B"] == pytest.approx(1.0)
+    # urgent claim: victims ascending bid (B@1 first, then A@3); C's first
+    # node is its free floor entitlement, the rest debit its budget
+    got = svc.claim("C", 5)
+    assert got == 5
+    assert svc.tenants["B"].alloc == 0 and svc.tenants["A"].alloc == 5
+    # 1 free + 3 nodes @ B's bid 1 + 1 node @ A's bid 3 = 6 tokens
+    assert m.spend["C"] == pytest.approx(6.0)
+    assert m.remaining["C"] == pytest.approx(4.0)
+    kinds = [e["kind"] for e in m.ledger]
+    assert kinds == ["idle", "idle", "reclaim", "reclaim"]
+    assert [(e["tenant"], e["nodes"], e["unit_price"]) for e in m.ledger] \
+        == [("A", 6, 1.0), ("B", 4, 1.0), ("C", 3, 1.0), ("C", 1, 3.0)]
+    svc.check()
+    # the whole run lands JSON-safe in the snapshot
+    snap = svc.policy.state_snapshot()
+    assert snap["engine"] == "budget_auction"
+    assert snap["market"]["spend"]["C"] == pytest.approx(6.0)
+    assert snap["market"]["clearing_prices"] == [pytest.approx(1.0)]
+
+
+def test_second_price_golden_clearing_prices():
+    """Pinned Vickrey run: with a rejected third bidder the clearing price
+    is the highest LOSING bid; with no losers it is zero."""
+    # all demand fits: no losers -> price 0, nobody pays
+    svc = _market_svc("second_price")
+    svc.set_demand("A", 6, provision=False)
+    svc.set_demand("B", 4, provision=False)
+    svc.provision_idle()
+    m = svc.policy.market
+    assert svc.tenants["A"].alloc == 6 and svc.tenants["B"].alloc == 4
+    assert svc.policy.price_samples == [pytest.approx(0.0)]
+    assert m.spend == {"A": 0.0, "B": 0.0}
+
+    # a losing bidder sets the price: D bids 0.5 and is fully rejected
+    svc = _market_svc("second_price")
+    svc.register(Tenant("D", "batch", priority=3, bid_weight=0.5,
+                        budget=5.0, on_force_release=_hook(svc, "D")))
+    svc.set_demand("A", 6, provision=False)
+    svc.set_demand("B", 4, provision=False)
+    svc.set_demand("D", 4, provision=False)
+    svc.provision_idle()
+    m = svc.policy.market
+    assert svc.tenants["A"].alloc == 6 and svc.tenants["B"].alloc == 4
+    assert svc.tenants["D"].alloc == 0
+    assert svc.policy.price_samples == [pytest.approx(0.5)]
+    assert m.spend == {"A": pytest.approx(3.0), "B": pytest.approx(2.0),
+                       "D": 0.0}
+    # reclaim pricing is inherited from budget_auction unchanged
+    got = svc.claim("C", 5)
+    assert got == 5
+    assert m.spend["C"] == pytest.approx(6.0)
+    svc.check()
+
+
+def test_second_price_payment_independent_of_own_bid():
+    """Truthfulness: a fully served Vickrey winner pays the best rejected
+    bid whatever it bid itself; under first-price its own bid can set the
+    clearing price (single-winner case)."""
+    def spend_a(policy, a_bid):
+        svc = TenantProvisionService(6, policy=policy)
+        svc.register(Tenant("A", "batch", priority=1, bid_weight=a_bid,
+                            budget=10_000.0))
+        svc.register(Tenant("B", "batch", priority=2, bid_weight=1.0,
+                            budget=10_000.0))
+        svc.set_demand("A", 6, provision=False)
+        svc.set_demand("B", 4, provision=False)   # B fully rejected
+        svc.provision_idle()
+        assert svc.tenants["A"].alloc == 6
+        return svc.policy.market.spend["A"]
+
+    # Vickrey: A pays B's bid (1.0/node) whether it bid 3 or 300
+    assert spend_a("second_price", 3.0) == pytest.approx(6.0)
+    assert spend_a("second_price", 300.0) == pytest.approx(6.0)
+    # first-price: A is the only (hence lowest) winner — its own bid is
+    # the clearing price, so inflating it costs real tokens
+    assert spend_a("budget_auction", 3.0) == pytest.approx(18.0)
+    assert spend_a("budget_auction", 300.0) == pytest.approx(1800.0)
+
+
+def test_second_price_payments_leq_first_price_on_identical_bids():
+    """Property: on one idle auction with identical bids/budgets/demands,
+    every tenant's Vickrey payment is <= its first-price payment."""
+    for seed in range(30):
+        rng = random.Random(9000 + seed)
+        total = rng.randint(4, 80)
+        n = rng.randint(2, 5)
+        rows = [(f"t{i}", i, round(rng.uniform(0.0, 5.0), 2),
+                 rng.randint(0, 40), round(rng.uniform(10.0, 500.0), 1))
+                for i in range(n)]
+        spends = {}
+        for policy in ("budget_auction", "second_price"):
+            svc = TenantProvisionService(total, policy=policy)
+            for name, prio, bw, demand, budget in rows:
+                svc.register(Tenant(name, "batch", priority=prio,
+                                    bid_weight=bw, budget=budget))
+                svc.set_demand(name, demand, provision=False)
+            svc.provision_idle()
+            svc.check()
+            spends[policy] = dict(svc.policy.market.spend)
+        for name, _, _, _, _ in rows:
+            assert spends["second_price"][name] <= \
+                spends["budget_auction"][name] + 1e-9, (seed, name, spends)
+
+
+# ------------------------------------------------------- budget semantics
+
+def test_broke_batch_tenant_stops_buying_idle():
+    svc = TenantProvisionService(20, policy="budget_auction")
+    svc.register(Tenant("rich", "batch", priority=1, bid_weight=2.0,
+                        budget=1000.0))
+    svc.register(Tenant("poor", "batch", priority=2, bid_weight=2.0,
+                        budget=3.0))          # can afford exactly 1 node
+    svc.set_demand("rich", 5, provision=False)
+    svc.set_demand("poor", 10, provision=False)
+    svc.provision_idle()
+    assert svc.tenants["rich"].alloc == 5
+    assert svc.tenants["poor"].alloc == 1     # affordability-capped
+    assert svc.free == 14                     # unmet demand but no money
+    m = svc.policy.market
+    assert m.remaining["poor"] >= 0.0
+    svc.check()                               # relaxed satiation invariant
+
+
+def test_broke_latency_claimant_falls_back_to_floor():
+    svc = TenantProvisionService(10, policy="budget_auction")
+    svc.register(Tenant("hpc", "batch", priority=2, bid_weight=2.0,
+                        budget=1000.0, on_force_release=_hook(svc, "hpc")))
+    svc.register(Tenant("ws", "latency", priority=0, floor=2, budget=0.0))
+    svc.set_demand("hpc", 10)                 # hpc buys the whole cluster
+    assert svc.tenants["hpc"].alloc == 10
+    # ws is broke: an urgent claim only reaches its free floor entitlement
+    got = svc.claim("ws", 8)
+    assert got == 2 and svc.tenants["ws"].alloc == 2
+    assert svc.policy.market.spend["ws"] == 0.0
+    # with tokens, the same claim digs further (2 free + affordable 3)
+    svc2 = TenantProvisionService(10, policy="budget_auction")
+    svc2.register(Tenant("hpc", "batch", priority=2, bid_weight=2.0,
+                         budget=1000.0, on_force_release=_hook(svc2, "hpc")))
+    svc2.register(Tenant("ws", "latency", priority=0, floor=2, budget=6.0))
+    svc2.set_demand("hpc", 10)
+    got = svc2.claim("ws", 8)
+    assert got == 5 and svc2.tenants["ws"].alloc == 5
+    assert svc2.policy.market.spend["ws"] == pytest.approx(6.0)
+    assert svc2.policy.market.remaining["ws"] == pytest.approx(0.0)
+
+
+def test_budgets_never_overspent_under_partial_releases():
+    """A victim refusing to release must neither let the plan walk into
+    charges beyond the claimant's budget NOR starve affordable victims
+    later in the plan (affordability is enforced live at apply time)."""
+    svc = TenantProvisionService(12, policy="budget_auction")
+    # cheap victim refuses to release; expensive one complies
+    svc.register(Tenant("cheap", "batch", priority=3, bid_weight=1.0,
+                        budget=100.0, on_force_release=lambda n: 0))
+    svc.register(Tenant("dear", "batch", priority=2, bid_weight=4.0,
+                        budget=100.0, on_force_release=_hook(svc, "dear")))
+    svc.register(Tenant("ws", "latency", priority=0, budget=8.0))
+    svc.set_demand("cheap", 6, provision=False)
+    svc.set_demand("dear", 6, provision=False)
+    svc.provision_idle()
+    got = svc.claim("ws", 12)
+    m = svc.policy.market
+    # the stuck cheap victim gave nothing; the claim still reached `dear`
+    # and bought exactly what 8 tokens afford at dear's price (2 @ 4.0)
+    assert got == 2 and svc.tenants["ws"].alloc == 2
+    assert m.spend["ws"] == pytest.approx(8.0)
+    assert m.remaining["ws"] == pytest.approx(0.0)
+    svc.check()
+
+
+def test_over_releasing_victim_never_overcharges_claimant():
+    """A victim releasing MORE than asked (DP-group rounding) hands the
+    surplus back to the free pool — the claimant is charged only for the
+    nodes it received, and the surplus is sold through the idle market
+    instead of being paid for twice."""
+    svc = TenantProvisionService(10, policy="budget_auction")
+    # trainer-style victim: always releases in whole groups of 8
+    svc.register(Tenant("train", "batch", priority=1, bid_weight=1.0,
+                        budget=1000.0, on_force_release=lambda n: 8))
+    svc.register(Tenant("ws", "latency", priority=0, budget=100.0))
+    svc.set_demand("train", 10)               # buys all 10 @ own bid 1.0
+    m = svc.policy.market
+    assert svc.tenants["train"].alloc == 10
+    spend_before = m.spend["train"]
+    got = svc.claim("ws", 2)
+    assert got == 2 and svc.tenants["ws"].alloc == 2
+    # charged for the 2 nodes received, NOT the 8 the victim released
+    assert m.spend["ws"] == pytest.approx(2.0)
+    # the 6 surplus nodes reflowed and were re-sold to train through the
+    # idle market (its demand is still 10), not double-charged to ws
+    assert svc.tenants["train"].alloc == 8
+    assert m.spend["train"] > spend_before
+    svc.check()
+
+
+# ------------------------------------------------------- slo_elastic bids
+
+def test_slo_elastic_bid_rises_as_headroom_shrinks_and_caps():
+    t = Tenant("ws", "latency", priority=0, bid_weight=2.0,
+               bid_policy="slo_elastic")
+
+    def sig(headroom):
+        return TenantSignals(name="ws", kind="latency", alloc=2, demand=4,
+                             latency_headroom_s=headroom, slo_target_s=30.0)
+
+    assert unit_bid(t, sig(30.0)) == pytest.approx(2.0)    # full headroom
+    assert unit_bid(t, sig(15.0)) == pytest.approx(3.0)
+    assert unit_bid(t, sig(0.0)) == pytest.approx(4.0)     # at the target
+    assert unit_bid(t, sig(-30.0)) == pytest.approx(6.0)   # violating
+    assert unit_bid(t, sig(-1e9)) == pytest.approx(8.0)    # capped at 4x
+    # compute_bid is the same price times unmet demand
+    assert compute_bid(t, sig(0.0)) == pytest.approx(8.0)
+    # linear tenants and tenants without an SLO target are unaffected
+    lin = Tenant("ws", "latency", priority=0, bid_weight=2.0)
+    assert unit_bid(lin, sig(-30.0)) == pytest.approx(2.0)
+    no_slo = TenantSignals(name="ws", kind="latency", alloc=2, demand=4,
+                           latency_headroom_s=-5.0, slo_target_s=0.0)
+    assert unit_bid(t, no_slo) == pytest.approx(2.0)
+
+
+# ------------------------------------------------------------- plumbing
+
+def test_market_state_registry_and_snapshot_roundtrip():
+    m = MarketState()
+    m.register("a", 10.0)
+    m.register("a", 99.0)                     # later registration ignored
+    m.register("b", None)
+    assert m.budgets == {"a": 10.0, "b": None}
+    assert m.affordable_nodes("a", 3.0) == 3
+    assert m.affordable_nodes("b", 3.0) > 10**6
+    assert m.affordable_nodes("a", 0.0) > 10**6
+    m.debit("a", 2, 3.0, "idle", 1)
+    assert m.remaining["a"] == pytest.approx(4.0)
+    snap = m.snapshot()
+    assert snap["remaining"]["b"] is None     # inf is JSON-safe
+    assert snap["spend"]["a"] == pytest.approx(6.0)
+    import json
+    json.dumps(snap)
+
+
+def test_market_engines_registered_and_resolvable():
+    assert get_policy("budget_auction").name == "budget_auction"
+    assert get_policy("second_price").name == "second_price"
+    assert isinstance(get_policy("second_price"), BudgetAuctionEngine)
+    assert isinstance(get_policy(SecondPriceEngine), SecondPriceEngine)
+    assert {"budget_auction", "second_price"} <= set(POLICIES)
+
+
+def test_market_state_reaches_sim_results():
+    from repro.core.simulator import ConsolidationSim
+    from repro.core.traces import synthetic_sdsc_blue, worldcup_demand_events
+    from repro.core.types import SimConfig
+
+    horizon = 6 * 3600.0
+    specs = [
+        TenantSpec("ws-a", "latency", priority=0, floor=2, budget=5000.0,
+                   bid_policy="slo_elastic",
+                   demand=worldcup_demand_events(seed=0, horizon=horizon)),
+        TenantSpec("hpc-a", "batch", priority=2, weight=2.0, budget=3000.0,
+                   jobs=synthetic_sdsc_blue(seed=0, n_jobs=60,
+                                            horizon=horizon, max_nodes=32)),
+        TenantSpec("hpc-b", "batch", priority=3, weight=1.0, budget=500.0,
+                   jobs=synthetic_sdsc_blue(seed=1, n_jobs=60,
+                                            horizon=horizon, max_nodes=32)),
+    ]
+    sim = ConsolidationSim(SimConfig(total_nodes=96), horizon=horizon,
+                           tenants=specs, policy="budget_auction")
+    res = sim.run()
+    market = res.policy_state["market"]
+    assert market["transactions"] > 0
+    assert market["budgets"] == {"ws-a": 5000.0, "hpc-a": 3000.0,
+                                 "hpc-b": 500.0}
+    for name, t in res.tenants.items():
+        assert t.spend >= 0.0
+        assert t.budget_remaining == pytest.approx(
+            market["budgets"][name] - t.spend)
+        assert t.budget_remaining >= -1e-6    # never overspent
+    assert sum(t.spend for t in res.tenants.values()) > 0.0
+    # clearing prices recorded and each <= the interval's max unit bid cap
+    assert market["clearing_prices"]
+    import json
+    json.dumps(res.policy_state)
+
+
+class _StubTrainer:
+    """Duck-typed ElasticTrainer: counts device moves, no JAX."""
+
+    def __init__(self, model_size=1, global_batch=8):
+        self.model_size = model_size
+        self.global_batch = global_batch
+        self.step = 0
+        self.devices = []
+        self.resizes = 0
+
+    def start(self, devices):
+        self.devices = list(devices)
+
+    def resize(self, devices):
+        self.devices = list(devices)
+        self.resizes += 1
+
+
+class _StubPool:
+    """Duck-typed ServingPool: one replica per device."""
+
+    def __init__(self):
+        self.replicas = []
+
+    def scale_to(self, devices):
+        self.replicas = list(devices)
+
+    def desired_replicas(self, load):
+        return int(load)
+
+
+def test_orchestrator_exposes_market_state():
+    """MultiTenantOrchestrator passes budgets through and market_state()
+    shows the serving department throttling as its budget drains."""
+    from repro.runtime.orchestrator import MultiTenantOrchestrator
+
+    devices = [f"dev{i}" for i in range(8)]
+    orch = MultiTenantOrchestrator(devices=devices, policy="budget_auction")
+    pool = _StubPool()
+    tr = _StubTrainer(model_size=1, global_batch=8)
+    orch.add_latency("serve", pool, priority=0, floor=1, budget=4.0,
+                     bid_policy="slo_elastic")
+    orch.add_batch("train", tr, priority=1, bid_weight=2.0, min_devices=1)
+    orch.start()
+    assert orch.market_state() is not None
+    # spike: the claim debits serve's budget at train's per-node bid (2):
+    # 1 free floor node + 2 paid nodes exhaust the 4-token budget
+    orch.latency_tick("serve", 8.0)
+    state = orch.market_state()
+    assert state["spend"]["serve"] == pytest.approx(4.0)
+    assert state["remaining"]["serve"] == pytest.approx(0.0)
+    replicas_when_broke = len(pool.replicas)
+    # broke: a second, bigger spike cannot buy anything further
+    orch.latency_tick("serve", 0.0)
+    orch.latency_tick("serve", 8.0)
+    assert len(pool.replicas) <= replicas_when_broke
+    assert orch.market_state()["remaining"]["serve"] == pytest.approx(0.0)
+    orch.devs.check()
+    orch.svc.check()
