@@ -48,6 +48,7 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.telemetry import NULL_TRACER
 from repro.core.types import MarketState, TenantSignals
 
 # per-engine cap on retained clearing-price / plan samples (aggregates are
@@ -180,6 +181,13 @@ class PolicyEngine:
         self.victim_nodes: Dict[str, int] = {}
         self.last_plan: List[str] = []
         self.plan_samples: List[List[str]] = []
+        # plans beyond the sample cap (aggregates above stay exact); kept
+        # as an attribute so capped sample lists are distinguishable from
+        # short runs without changing the serialized snapshot
+        self.plan_samples_dropped = 0
+        # telemetry sink; the provision service swaps in its live Tracer
+        # at wiring time (core/telemetry.py) — NULL_TRACER costs a branch
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------------------- phase 1
     def plan_reclaim(self, deficit: int, tenants: Sequence[Tenant],
@@ -227,6 +235,8 @@ class PolicyEngine:
         self.last_plan = [s.victim for s in plan]
         if len(self.plan_samples) < STATE_SAMPLES_MAX:
             self.plan_samples.append(self.last_plan)
+        else:
+            self.plan_samples_dropped += 1
 
     def reclaim_cap(self, victim: Tenant, take: int, claimant: Tenant
                     ) -> int:
@@ -455,6 +465,7 @@ class AuctionEngine(PolicyEngine):
         self.price_sum = 0.0
         self.price_max = 0.0
         self.price_samples: List[float] = []
+        self.price_samples_dropped = 0
         self.last_bids: Dict[str, float] = {}
         self.last_clearing_price: Optional[float] = None
         self.reclaim_price_sum = 0.0
@@ -467,6 +478,11 @@ class AuctionEngine(PolicyEngine):
         self.last_clearing_price = price
         if len(self.price_samples) < STATE_SAMPLES_MAX:
             self.price_samples.append(price)
+        else:
+            self.price_samples_dropped += 1
+        if self.tracer.enabled:
+            self.tracer.emit("auction_clear", price=float(price),
+                             interval=self.intervals, engine=self.name)
 
     def _note_reclaim_price(self, plan: List[ReclaimStep],
                             prices: Dict[str, float], deficit: int):

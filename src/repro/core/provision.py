@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.policies import (CooperativePolicy, PaperPolicy,
                                  PolicyEngine, Tenant, get_policy)
+from repro.core.telemetry import NULL_TRACER, Tracer
 from repro.core.types import TenantSignals, TenantSpec
 
 
@@ -38,13 +39,26 @@ class TenantProvisionService:
     """Registry state machine with per-tenant allocations and a pluggable
     cooperative policy."""
 
-    def __init__(self, total_nodes: int, *, policy="paper"):
+    def __init__(self, total_nodes: int, *, policy="paper",
+                 tracer: Optional[Tracer] = None):
         self.total = total_nodes
         self.free = total_nodes
         self.policy: PolicyEngine = get_policy(policy)
         # insertion-ordered: registration order is the deterministic
         # attribution order for node failures and timeline columns
         self.tenants: Dict[str, Tenant] = {}
+        self.tracer = NULL_TRACER
+        self.set_tracer(tracer or NULL_TRACER)
+
+    def set_tracer(self, tracer: Tracer) -> None:
+        """Point the service AND its engine (and the engine's market, for
+        budget engines) at one event bus; the clock owner (simulator /
+        orchestrator) keeps ``tracer.now`` current."""
+        self.tracer = tracer
+        self.policy.tracer = tracer
+        market = getattr(self.policy, "market", None)
+        if market is not None:
+            market.tracer = tracer
 
     # ------------------------------------------------------------- wiring
     def register(self, tenant: Tenant) -> Tenant:
@@ -113,14 +127,37 @@ class TenantProvisionService:
         assert t.kind == "latency", f"{name} is not a latency tenant"
         if n <= 0:
             return 0
+        tr = self.tracer
+        traced = tr.enabled
+        claim_span = tr.new_span() if traced else 0
         granted = min(self.free, n)
         self.free -= granted
         t.alloc += granted
         short = n - granted
+        deficit = short
         surplus = 0
+        plan_span = 0
         if short > 0:
             plan = self.policy.plan_reclaim(
                 short, list(self.tenants.values()), t)
+            if traced:
+                # claim-path emits are fully inlined (dict literal +
+                # bounds-checked list append) — this is the hottest traced
+                # region and the < 5 % bench gate rides on it
+                plan_span = tr.new_span()
+                evs = tr.events
+                if len(evs) < tr.max_events:
+                    evs.append({"type": "reclaim_plan", "ts": tr.now,
+                                "span": plan_span, "parent": claim_span,
+                                "tenant": name,
+                                "engine": self.policy.name,
+                                "deficit": short,
+                                "steps": [{"victim": s.victim,
+                                           "take": s.take,
+                                           "reason": s.reason}
+                                          for s in plan]})
+                else:
+                    tr.dropped_events += 1
             for step in plan:
                 if short <= 0:
                     break
@@ -151,10 +188,35 @@ class TenantProvisionService:
                 surplus += got - give
                 # full release for drain stats, `give` for money engines
                 self.policy.note_reclaimed(v.name, got, granted=give)
+                if traced:
+                    evs = tr.events
+                    if len(evs) < tr.max_events:
+                        evs.append({"type": "reclaim_step", "ts": tr.now,
+                                    "parent": plan_span, "tenant": v.name,
+                                    "claimant": name, "asked": take,
+                                    "released": got, "granted": give})
+                    else:
+                        tr.dropped_events += 1
+        if traced:
+            # emitted after the plan/steps so the whole chain shares one
+            # decision instant; `short` here is the FINAL unmet remainder
+            evs = tr.events
+            if len(evs) < tr.max_events:
+                evs.append({"type": "claim", "ts": tr.now,
+                            "span": claim_span, "tenant": name,
+                            "requested": n, "from_free": granted,
+                            "deficit": deficit, "granted": n - short,
+                            "short": short})
+            else:
+                tr.dropped_events += 1
+            tr.last_claim_span[name] = claim_span
         if surplus > 0:
             # over-released nodes go back through the idle policy (they are
             # typically re-granted to the very tenant that shed them)
             self.free += surplus
+            if traced:
+                tr.append({"type": "surplus_reflow", "parent": claim_span,
+                           "nodes": surplus})
             self.provision_idle()
         self.check()
         return n - short
@@ -169,6 +231,9 @@ class TenantProvisionService:
         n = min(n, t.alloc)
         t.alloc -= n
         self.free += n
+        if self.tracer.enabled and n > 0:
+            self.tracer.append({"type": "release", "tenant": name,
+                                "nodes": n})
         if reprovision:
             self.provision_idle()
         self.check()
@@ -194,6 +259,9 @@ class TenantProvisionService:
             give = min(give, self.free)
             self.free -= give
             t.alloc += give
+            if self.tracer.enabled:
+                self.tracer.append({"type": "idle_grant", "tenant": t.name,
+                                    "nodes": give})
             if t.on_grant is not None:
                 t.on_grant(give)
         self.check()
@@ -213,6 +281,7 @@ class TenantProvisionService:
         if owner not in by_name:
             raise KeyError(f"unknown pool {owner!r}; have "
                            f"{[p for p, _ in pools]}")
+        requested_owner = owner
         if by_name[owner] <= 0:
             owner = next((p for p, alloc in pools if alloc > 0), None)
             if owner is None:
@@ -223,6 +292,9 @@ class TenantProvisionService:
         else:
             self.tenants[owner].alloc -= 1
         self.total -= 1
+        if self.tracer.enabled:
+            self.tracer.emit("node_fail", owner=owner,
+                             requested=requested_owner, total=self.total)
         if self.policy.demand_driven:
             # a failure can drop a batch tenant below its declared demand
             # while nodes sit free; rebalance to restore the invariant
@@ -232,6 +304,8 @@ class TenantProvisionService:
     def node_repaired(self):
         self.total += 1
         self.free += 1
+        if self.tracer.enabled:
+            self.tracer.emit("node_repair", total=self.total)
         self.provision_idle()   # re-provision before the invariant check:
         self.check()            # the repaired node may cover unmet demand
 
@@ -265,8 +339,9 @@ class ResourceProvisionService(TenantProvisionService):
     unchanged.
     """
 
-    def __init__(self, total_nodes: int):
-        super().__init__(total_nodes, policy=PaperPolicy())
+    def __init__(self, total_nodes: int, *,
+                 tracer: Optional[Tracer] = None):
+        super().__init__(total_nodes, policy=PaperPolicy(), tracer=tracer)
         # registration order (st, ws) is a compatibility contract: node
         # failures and timeline columns attribute in this order
         self._st = self.register(Tenant("st", "batch", priority=1))

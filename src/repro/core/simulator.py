@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.provision import (ResourceProvisionService,
                                   TenantProvisionService)
 from repro.core.st_cms import STServer
+from repro.core.telemetry import NULL_TRACER, Tracer
 from repro.core.types import (Event, EventKind, Job, JobState, SimConfig,
                               TenantSpec)
 from repro.core.ws_cms import WSServer, resolve_demand_events
@@ -176,7 +177,7 @@ class ConsolidationSim:
     def __init__(self, cfg: SimConfig, jobs: Optional[List[Job]] = None,
                  ws_demand=None, horizon: float = 0.0, *,
                  tenants: Optional[Sequence[TenantSpec]] = None,
-                 policy=None):
+                 policy=None, tracer: Optional[Tracer] = None):
         """Two calling conventions:
 
         * legacy / paper (degenerate 2-department): ``ConsolidationSim(cfg,
@@ -192,6 +193,7 @@ class ConsolidationSim:
         self.cfg = cfg
         self.horizon = horizon
         self.now = 0.0
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.rng = random.Random(cfg.seed)
         self._q: List[Event] = []
         self._seq = 0
@@ -222,12 +224,22 @@ class ConsolidationSim:
 
         if self._degenerate:
             self.svc: TenantProvisionService = \
-                ResourceProvisionService(cfg.total_nodes)
+                ResourceProvisionService(cfg.total_nodes,
+                                         tracer=self.tracer)
         else:
-            self.svc = TenantProvisionService(cfg.total_nodes, policy=policy)
+            self.svc = TenantProvisionService(cfg.total_nodes, policy=policy,
+                                              tracer=self.tracer)
         self.rps = self.svc            # legacy attribute name
         self.policy_name = self.svc.policy.name
         self._demand_driven = self.svc.policy.demand_driven
+        if self.tracer.enabled:
+            self.tracer.meta.setdefault("policy", self.policy_name)
+            self.tracer.meta.setdefault("total_nodes", cfg.total_nodes)
+            self.tracer.meta.setdefault("horizon", horizon)
+            self.tracer.meta.setdefault("seed", cfg.seed)
+        # open SLO-shortfall episodes: tenant -> (violation span, start ts)
+        self._episodes: Dict[str, Tuple[int, float]] = {}
+        self._next_sample = 0.0
 
         self._runtimes: List[_TenantRuntime] = []
         for spec in tenants:
@@ -274,6 +286,15 @@ class ConsolidationSim:
 
         self._batch = [rt for rt in self._runtimes if rt.is_batch]
         self._latency = [rt for rt in self._runtimes if not rt.is_batch]
+        # metric-sample fast path: the per-runtime attribute walk is
+        # hoisted once (runtimes are fixed after construction), as is the
+        # engine's market handle — _trace_sample runs inside the < 5 %
+        # bench envelope
+        self._sample_rows = [
+            (rt.name, rt.record, rt.server, rt.is_batch,
+             rt.is_batch and hasattr(rt.server, "queue"))
+            for rt in self._runtimes]
+        self._trace_market = getattr(self.svc.policy, "market", None)
         # legacy aliases (the paper wiring); first of each class otherwise
         self.st = self._batch[0].server if self._batch else None
         self.ws = self._latency[0].server if self._latency else None
@@ -358,12 +379,21 @@ class ConsolidationSim:
         self._update_demands()
         self.svc.provision_idle()
 
+        # telemetry fast path: the traced-loop additions must stay near
+        # one dict-append per emitted event (< 5% bench gate); episode
+        # checks run only on events that can move a latency department's
+        # alloc/demand (WS_DEMAND, NODE_FAIL/REPAIR — job events and idle
+        # reflows only ever touch batch allocations)
+        tr = self.tracer
+        traced = tr.enabled
         while self._q:
             ev = heapq.heappop(self._q)
             if ev.time > self.horizon:
                 break
             self._account(ev.time)
             self.now = ev.time
+            if traced:
+                tr.now = ev.time
             if ev.kind is EventKind.JOB_SUBMIT:
                 rt, job = ev.payload
                 rt.server.submit(job, self.now)
@@ -374,21 +404,114 @@ class ConsolidationSim:
                     rt.server.job_finished(job, self.now)
             elif ev.kind is EventKind.WS_DEMAND:
                 rt, n = ev.payload
+                if traced:
+                    # the demand event IS the autoscaler's decision when
+                    # the source is a provider (its SLO autoscaler planned
+                    # the node-demand series); raw timeseries otherwise.
+                    # Inlined append: hottest traced site in the loop.
+                    evs = tr.events
+                    if len(evs) < tr.max_events:
+                        evs.append({"type": "autoscale", "ts": tr.now,
+                                    "tenant": rt.name,
+                                    "prev": rt.server.demand, "demand": n,
+                                    "source": "provider"
+                                    if rt.provider is not None
+                                    else "timeseries"})
+                    else:
+                        tr.dropped_events += 1
                 rt.server.set_demand(n, self.now)
+                if traced:
+                    self._trace_episodes()
             elif ev.kind is EventKind.NODE_FAIL:
                 self._node_fail()
                 self._push(self.now + self.rng.expovariate(
                     self.cfg.total_nodes / self.cfg.node_mtbf),
                     EventKind.NODE_FAIL)
+                if traced:
+                    self._trace_episodes()
             elif ev.kind is EventKind.NODE_REPAIR:
                 self.svc.node_repaired()
+                if traced:
+                    self._trace_episodes()
             self._update_demands()     # no-op under the paper policy
+            if traced and self.now >= self._next_sample:
+                self._trace_sample()
             self.timeline.append(
                 (self.now,
                  *(rt.record.alloc for rt in self._runtimes),
                  self.svc.free))
         self._account(self.horizon)
+        if traced:
+            tr.now = self.horizon
+            self._trace_episodes()
+            self._trace_sample()       # closing sample at the horizon
         return self._result()
+
+    # ------------------------------------------------------------ telemetry
+    def _trace_episodes(self):
+        """SLO shortfall episodes: open a ``slo_violation`` span when a
+        latency department's granted allocation falls below its demand
+        (parented to its most recent claim so the whole ``claim ->
+        reclaim -> recovery`` chain links up), close it with a
+        ``slo_recovery`` when the shortfall clears."""
+        tr = self.tracer
+        eps = self._episodes
+        for rt in self._latency:
+            shortfall = rt.server.demand - rt.record.alloc
+            if shortfall > 0:
+                if rt.name not in eps:
+                    span = tr.new_span()
+                    eps[rt.name] = (span, self.now)
+                    tr.append({"type": "slo_violation", "span": span,
+                               "parent": tr.last_claim_span.get(rt.name),
+                               "tenant": rt.name,
+                               "demand": rt.server.demand,
+                               "alloc": rt.record.alloc,
+                               "shortfall": shortfall})
+            elif rt.name in eps:
+                span, start = eps.pop(rt.name)
+                tr.append({"type": "slo_recovery", "parent": span,
+                           "tenant": rt.name,
+                           "duration_s": self.now - start})
+
+    def _trace_sample(self):
+        """One ``metrics`` timeseries point: free pool + per-department
+        alloc/demand/queue/headroom/spend. Reads registry fields and cheap
+        CMS attributes only — never ``signals()`` (batch demand_nodes
+        walks the whole job queue, which would blow the overhead gate)."""
+        tr = self.tracer
+        tenants: Dict[str, Dict] = {}
+        market = self._trace_market
+        for name, rec, server, is_batch, has_queue in self._sample_rows:
+            spend = market.spend.get(name, 0.0) if market is not None \
+                else 0.0
+            if is_batch:
+                # under demand-driven policies rec.demand is kept current
+                # by _update_demands; the paper engine never declares it
+                tenants[name] = {
+                    "alloc": rec.alloc, "demand": rec.demand,
+                    "queue_depth": len(server.queue) if has_queue else 0,
+                    "headroom_s": 0.0, "spend": spend}
+            else:
+                demand = server.demand
+                alloc = rec.alloc
+                tenants[name] = {
+                    "alloc": alloc, "demand": demand,
+                    "queue_depth": demand - alloc if demand > alloc else 0,
+                    "headroom_s": server.latency_headroom_s(),
+                    "spend": spend}
+        evs = tr.events
+        if len(evs) < tr.max_events:
+            evs.append({"type": "metrics", "ts": tr.now,
+                        "free": self.svc.free, "tenants": tenants})
+        else:
+            tr.dropped_events += 1
+        interval = tr.metric_interval_s
+        if interval > 0:
+            while self._next_sample <= self.now:
+                self._next_sample += interval
+        else:
+            self._next_sample = math.inf
 
     def _node_fail(self):
         total_alloc = self.svc.free + sum(rt.record.alloc

@@ -161,9 +161,17 @@ class MarketState:
     remaining: Dict[str, float] = field(default_factory=dict)  # inf = no cap
     spend: Dict[str, float] = field(default_factory=dict)
     transactions: int = 0
-    # capped inspection samples; aggregates above are exact
+    # capped inspection samples; aggregates above are exact, and entries
+    # dropped past the cap are COUNTED (no silent caps: a capped trace
+    # must be distinguishable from a short one)
     ledger: List[Dict] = field(default_factory=list)
     clearing_prices: List[float] = field(default_factory=list)
+    ledger_dropped: int = 0
+    clearing_prices_dropped: int = 0
+    # telemetry sink (core/telemetry.py); every debit lands in the trace
+    # even after the ledger sample cap. Excluded from ==/repr: two runs
+    # with identical money flows are equal regardless of tracing.
+    tracer: object = field(default=None, repr=False, compare=False)
 
     def register(self, name: str, budget: Optional[float]) -> None:
         """First sight of a tenant: seed its remaining budget. Later calls
@@ -196,11 +204,19 @@ class MarketState:
                                 "unit_price": float(unit_price),
                                 "cost": cost, "kind": kind,
                                 "interval": int(interval)})
+        else:
+            self.ledger_dropped += 1
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.emit("debit", tenant=name, nodes=int(nodes),
+                             unit_price=float(unit_price), cost=cost,
+                             kind=kind, interval=int(interval))
         return cost
 
     def note_price(self, price: float) -> None:
         if len(self.clearing_prices) < MARKET_SAMPLES_MAX:
             self.clearing_prices.append(float(price))
+        else:
+            self.clearing_prices_dropped += 1
 
     def snapshot(self) -> Dict:
         """JSON-safe snapshot (unlimited budgets serialize as null)."""
@@ -212,6 +228,9 @@ class MarketState:
             "transactions": self.transactions,
             "ledger": [dict(e) for e in self.ledger],
             "clearing_prices": list(self.clearing_prices),
+            "dropped_entries": {"ledger": self.ledger_dropped,
+                                "clearing_prices":
+                                    self.clearing_prices_dropped},
         }
 
 

@@ -26,6 +26,7 @@ from typing import Dict, List, Optional
 from repro.core.cms import proxy_headroom_s
 from repro.core.provision import (ResourceProvisionService,
                                   TenantProvisionService)
+from repro.core.telemetry import NULL_TRACER, Tracer
 from repro.core.types import TenantSignals, TenantSpec
 from repro.runtime.device_pool import DevicePool
 from repro.runtime.elastic import ElasticTrainer
@@ -69,13 +70,24 @@ class MultiTenantOrchestrator:
     through the same ``TenantProvisionService`` the simulator uses.
     """
 
-    def __init__(self, *, devices=None, policy="paper"):
+    def __init__(self, *, devices=None, policy="paper",
+                 tracer: Optional[Tracer] = None):
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.devs = DevicePool(devices, groups=())
-        self.svc = TenantProvisionService(self.devs.total, policy=policy)
+        self.svc = TenantProvisionService(self.devs.total, policy=policy,
+                                          tracer=self.tracer)
         self.batch: Dict[str, _BatchDept] = {}
         self.latency: Dict[str, _LatencyDept] = {}
         self.events: List[Dict] = []
         self._started = False
+        # the runtime has no virtual clock: control intervals are the time
+        # axis, one tick per latency_tick/train_steps call
+        self._ticks = 0
+
+    def _tick_clock(self):
+        self._ticks += 1
+        if self.tracer.enabled:
+            self.tracer.now = float(self._ticks)
 
     # ------------------------------------------------------------ registry
     def add_batch(self, name: str, trainer: ElasticTrainer, *,
@@ -209,6 +221,7 @@ class MultiTenantOrchestrator:
     def latency_tick(self, name: str, offered_load_tokens: float):
         """One control interval for a latency department: autoscale replicas
         to the offered load (paper §III-C utilization rule)."""
+        self._tick_clock()
         dept = self.latency[name]
         self._scale_latency(name,
                             dept.pool.desired_replicas(offered_load_tokens))
@@ -217,6 +230,7 @@ class MultiTenantOrchestrator:
                          mean_service_s: float, scv_service: float = 1.0,
                          p99_service_s: Optional[float] = None):
         """One control interval driven by the department's latency SLO."""
+        self._tick_clock()
         dept = self.latency[name]
         assert dept.slo_autoscaler is not None, \
             f"add_latency({name!r}, ..., slo_autoscaler=...) first"
@@ -238,6 +252,11 @@ class MultiTenantOrchestrator:
 
     def _scale_latency(self, name: str, want: int):
         dept = self.latency[name]
+        if self.tracer.enabled and want != dept.demand:
+            self.tracer.emit("autoscale", tenant=name, prev=dept.demand,
+                             demand=want, source="slo_autoscaler"
+                             if dept.slo_autoscaler is not None
+                             else "utilization")
         dept.demand = want
         have = len(dept.pool.replicas)
         if want > have:
@@ -252,6 +271,7 @@ class MultiTenantOrchestrator:
                             "replicas": len(dept.pool.replicas)})
 
     def train_steps(self, name: str, n: int) -> Dict:
+        self._tick_clock()
         return self.batch[name].trainer.train_steps(n)
 
 

@@ -1,0 +1,195 @@
+"""Trace analyzer CLI for control-plane telemetry (core/telemetry.py).
+
+    python -m repro.trace summarize CELL.trace.jsonl
+    python -m repro.trace diff A.trace.jsonl B.trace.jsonl
+    python -m repro.trace causality CELL.trace.jsonl --tenant ws-0
+    python -m repro.trace validate CELL.trace.jsonl
+    python -m repro.trace perfetto CELL.trace.jsonl --out cell.perfetto.json
+
+``summarize`` prints per-tenant reclaim-latency and SLO-violation-duration
+distributions plus spend attribution; ``diff`` compares two summaries
+(e.g. the same cell under two engines); ``causality`` walks every forced
+claim's ``claim -> reclaim plan -> drains -> SLO recovery`` chain;
+``validate`` schema-checks the trace and verifies causal-chain integrity
+(non-zero exit on any problem — CI gates on it); ``perfetto`` exports
+Chrome trace-event JSON loadable in https://ui.perfetto.dev or
+chrome://tracing. All subcommands take ``--json`` for machine output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.telemetry import (causality_report, check_causal_chains,
+                                  diff_summaries, load_events,
+                                  summarize_events, to_perfetto,
+                                  validate_events)
+
+
+def _fmt_dist(d: dict) -> str:
+    return (f"n={d['n']} p50={d['p50']:.1f}s p99={d['p99']:.1f}s "
+            f"max={d['max']:.1f}s")
+
+
+def _print_summary(s: dict) -> None:
+    print(f"events: {s['events']}")
+    for t, n in s["by_type"].items():
+        print(f"  {t:<16} {n}")
+    rl = s["reclaim_latency_s"]
+    print(f"reclaim latency (overall): {_fmt_dist(rl['overall'])}")
+    for name, d in rl["by_tenant"].items():
+        print(f"  {name:<16} {_fmt_dist(d)}")
+    for name, n in rl["unrecovered"].items():
+        print(f"  {name:<16} {n} claim(s) never recovered")
+    if s["slo_violations"]:
+        print("slo violations:")
+        for name, v in s["slo_violations"].items():
+            print(f"  {name:<16} count={v['count']} open={v['open']} "
+                  f"{_fmt_dist(v['duration_s'])}")
+    if s["spend"]:
+        print("spend attribution:")
+        for name, d in s["spend"].items():
+            print(f"  {name:<16} idle={d.get('idle', 0.0):.2f} "
+                  f"reclaim={d.get('reclaim', 0.0):.2f}")
+    if s["auction"]["clearings"]:
+        print(f"auction clearings: {s['auction']['clearings']} "
+              f"price {_fmt_dist(s['auction']['clearing_price'])}")
+
+
+def _cmd_summarize(args) -> int:
+    s = summarize_events(load_events(args.trace))
+    if args.json:
+        json.dump(s, sys.stdout, indent=1)
+        print()
+    else:
+        _print_summary(s)
+    return 0
+
+
+def _cmd_diff(args) -> int:
+    d = diff_summaries(summarize_events(load_events(args.a)),
+                       summarize_events(load_events(args.b)))
+    if args.json:
+        json.dump(d, sys.stdout, indent=1)
+        print()
+        return 0
+    print(f"events: {d['events']['a']} -> {d['events']['b']} "
+          f"({d['events']['delta']:+d})")
+    for t, v in d["by_type"].items():
+        if v["delta"]:
+            print(f"  {t:<16} {v['a']} -> {v['b']} ({v['delta']:+d})")
+    rl = d["reclaim_latency_s"]
+    print("reclaim latency: " + "  ".join(
+        f"{k}={rl[k]['a']:.1f}->{rl[k]['b']:.1f}"
+        for k in ("n", "p50", "p99", "max")))
+    for name, v in d["slo_violations"].items():
+        print(f"  slo {name}: count {v['count']['a']}->{v['count']['b']} "
+              f"p99_dur {v['p99_duration_s']['a']:.1f}s->"
+              f"{v['p99_duration_s']['b']:.1f}s")
+    for name, v in d["spend"].items():
+        print(f"  spend {name}: idle {v['idle']['a']:.1f}->"
+              f"{v['idle']['b']:.1f} reclaim {v['reclaim']['a']:.1f}->"
+              f"{v['reclaim']['b']:.1f}")
+    return 0
+
+
+def _cmd_causality(args) -> int:
+    rep = causality_report(load_events(args.trace), tenant=args.tenant)
+    if args.json:
+        json.dump(rep, sys.stdout, indent=1)
+        print()
+        return 0 if not rep["broken_chains"] else 1
+    who = args.tenant or "all tenants"
+    print(f"forced-reclaim claims ({who}): {rep['forced_claims']}")
+    for c in rep["chains"]:
+        print(f"[t={c['ts']:.1f}s] {c['tenant']} requested {c['requested']} "
+              f"(free={c['from_free']}, granted={c['granted']}, "
+              f"short={c['short']}) engine={c['engine']}")
+        print(f"    plan: {c['planned_victims']}")
+        for dr in c["drains"]:
+            print(f"    drain {dr['victim']}: released {dr['released']}, "
+                  f"claimant got {dr['granted']}")
+        ep = c.get("shortfall_episode")
+        if ep is not None:
+            if ep["recovered"]:
+                print(f"    shortfall episode: recovered after "
+                      f"{ep['duration_s']:.1f}s")
+            else:
+                print("    shortfall episode: NEVER recovered")
+    if rep["broken_chains"]:
+        print(f"BROKEN causal chains: {len(rep['broken_chains'])}")
+        for p in rep["broken_chains"][:10]:
+            print(f"  {p}")
+        return 1
+    print("causal chains intact")
+    return 0
+
+
+def _cmd_validate(args) -> int:
+    events = load_events(args.trace)
+    problems = validate_events(events) + check_causal_chains(events)
+    if args.json:
+        json.dump({"events": len(events), "problems": problems},
+                  sys.stdout, indent=1)
+        print()
+    elif problems:
+        for p in problems:
+            print(p)
+    else:
+        print(f"ok: {len(events)} events, schema valid, "
+              f"causal chains intact")
+    return 1 if problems else 0
+
+
+def _cmd_perfetto(args) -> int:
+    doc = to_perfetto(load_events(args.trace))
+    with open(args.out, "w") as f:
+        json.dump(doc, f)
+    print(f"{len(doc['traceEvents'])} trace events -> {args.out} "
+          f"(open in https://ui.perfetto.dev)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.trace",
+        description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("summarize", help="per-tenant latency/SLO/spend "
+                                         "distributions")
+    p.add_argument("trace")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_summarize)
+
+    p = sub.add_parser("diff", help="compare two trace summaries")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_diff)
+
+    p = sub.add_parser("causality", help="walk claim -> reclaim -> "
+                                         "recovery chains")
+    p.add_argument("trace")
+    p.add_argument("--tenant", default=None)
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_causality)
+
+    p = sub.add_parser("validate", help="schema + causal-integrity check "
+                                        "(non-zero exit on problems)")
+    p.add_argument("trace")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_validate)
+
+    p = sub.add_parser("perfetto", help="export Chrome trace-event JSON")
+    p.add_argument("trace")
+    p.add_argument("--out", required=True)
+    p.set_defaults(fn=_cmd_perfetto)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

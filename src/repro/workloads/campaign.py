@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.policies import POLICIES
 from repro.core.simulator import ConsolidationSim
+from repro.core.telemetry import Tracer, summarize_events
 from repro.core.traces import synthetic_sdsc_blue
 from repro.core.types import SimConfig, SLOConfig, TenantSpec
 from repro.serving.batching import ServiceTimeModel
@@ -264,10 +265,24 @@ def make_tenants(cell: ScenarioCell) -> List[TenantSpec]:
     return specs
 
 
-def run_cell(cell: ScenarioCell) -> Dict:
-    """Run one scenario end-to-end; returns axes + metrics as a flat dict."""
+def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
+    """Run one scenario end-to-end; returns axes + metrics as a flat dict.
+
+    ``trace_dir`` (the runner's ``--trace``) enables control-plane
+    telemetry for the cell: the full causal trace is spooled to
+    ``<trace_dir>/<cell_id>.trace.jsonl`` and a compact summary
+    (reclaim-latency p50/p99, SLO-violation durations, spend attribution)
+    is folded into the row under ``trace_summary``. Tracing is a RUNNER
+    flag, not a cell field: cell_key — the spool/resume/merge identity —
+    is unchanged, and with tracing off the row is bit-identical to v5.
+    """
     t0 = time.time()
     q0 = snapshot_counters()
+    tracer = None
+    if trace_dir is not None:
+        tracer = Tracer(meta={"cell_id": cell.cell_id(),
+                              "cell_key": cell.cell_key(),
+                              "schema": SCHEMA})
     cfg = SimConfig(total_nodes=cell.total_nodes,
                     preempt_mode=cell.preempt,
                     scheduler=cell.scheduler, seed=cell.seed)
@@ -281,14 +296,15 @@ def run_cell(cell: ScenarioCell) -> Dict:
         workload = RequestWorkload(
             trace=trace, model=ServiceTimeModel(),
             slo=SLOConfig(latency_target_s=cell.slo_target_s))
-        sim = ConsolidationSim(cfg, jobs, workload, horizon=cell.horizon_s)
+        sim = ConsolidationSim(cfg, jobs, workload, horizon=cell.horizon_s,
+                               tracer=tracer)
         ws_requests = len(trace)
         peak = max((n for _, n in workload.demand_events(cell.horizon_s)),
                    default=0)
     else:
         tenants = make_tenants(cell)
         sim = ConsolidationSim(cfg, horizon=cell.horizon_s, tenants=tenants,
-                               policy=cell.policy)
+                               policy=cell.policy, tracer=tracer)
         ws_requests = sum(len(s.demand.trace) for s in tenants
                           if s.kind == "latency")
         peak = sum(max((n for _, n in s.demand.demand_events(cell.horizon_s)),
@@ -344,6 +360,15 @@ def run_cell(cell: ScenarioCell) -> Dict:
     # clearing prices; v5 adds the market ledger (budgets, remaining,
     # spend, clearing prices) for the budget engines
     out["policy_state"] = res.policy_state
+    if tracer is not None:
+        # optional keys only — absent with tracing off, excluded from
+        # REDUCE_KEYS, so reductions and untraced artifacts are unchanged
+        trace_file = os.path.join(trace_dir,
+                                  f"{cell.cell_id()}.trace.jsonl")
+        tracer.to_jsonl(trace_file)
+        out["trace_file"] = trace_file
+        out["trace_summary"] = summarize_events(
+            [tracer.header()] + tracer.events)
     return out
 
 
@@ -449,7 +474,8 @@ def _throughput(rows: Sequence[Dict], executed: int, skipped: int,
 
 
 def _run_cells_streaming(cells: Sequence[ScenarioCell], workers: int,
-                         spool_path: Optional[str]) -> List[Dict]:
+                         spool_path: Optional[str],
+                         trace_dir: Optional[str] = None) -> List[Dict]:
     """Run cells, appending each finished row to the spool immediately so
     an interrupted run loses at most the in-flight cells."""
     rows: List[Dict] = []
@@ -464,7 +490,8 @@ def _run_cells_streaming(cells: Sequence[ScenarioCell], workers: int,
             from concurrent.futures import (ProcessPoolExecutor,
                                             as_completed)
             with ProcessPoolExecutor(max_workers=workers) as pool:
-                futs = {pool.submit(run_cell, c): c for c in cells}
+                futs = {pool.submit(run_cell, c, trace_dir): c
+                        for c in cells}
                 for fut in as_completed(futs):
                     emit(fut.result())
             return rows
@@ -474,7 +501,7 @@ def _run_cells_streaming(cells: Sequence[ScenarioCell], workers: int,
                   f"running serial", file=sys.stderr)
             rows = []
     for c in cells:
-        emit(run_cell(c))
+        emit(run_cell(c, trace_dir))
     return rows
 
 
@@ -488,14 +515,20 @@ def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
                  grid_name: str = "custom",
                  spool_path: Optional[str] = None,
                  resume: bool = False,
-                 shard: Optional[str] = None) -> Dict:
+                 shard: Optional[str] = None,
+                 trace_dir: Optional[str] = None) -> Dict:
     """Run (a shard of) a campaign grid, optionally resuming from a spool.
 
     The artifact's ``cells`` keep the grid order and its ``reductions``
     are order-independent, so sharded spools merged later reproduce a
-    single-shot artifact's reductions exactly.
+    single-shot artifact's reductions exactly. ``trace_dir`` enables
+    per-cell control-plane traces (see ``run_cell``); it changes neither
+    cell keys nor any reduced column, so traced and untraced runs of the
+    same grid stay merge-compatible.
     """
     t0 = time.time()
+    if trace_dir is not None:
+        os.makedirs(trace_dir, exist_ok=True)
     cells = shard_cells(cells, shard)
     keys = [c.cell_key() for c in cells]
     done: Dict[str, Dict] = {}
@@ -503,7 +536,7 @@ def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
         spooled = spool_load(spool_path)
         done = {k: spooled[k] for k in keys if k in spooled}
     todo = [c for c, k in zip(cells, keys) if k not in done]
-    new_rows = _run_cells_streaming(todo, workers, spool_path)
+    new_rows = _run_cells_streaming(todo, workers, spool_path, trace_dir)
     by_key = dict(done)
     by_key.update({r["cell_key"]: r for r in new_rows})
     results = _assemble(by_key, keys)
@@ -604,6 +637,12 @@ def _main_run(argv) -> int:
                          "when --shard/--resume is used)")
     ap.add_argument("--resume", action="store_true",
                     help="skip cells already present in the spool")
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="spool a control-plane trace per cell (JSONL, "
+                         "analyzable with `python -m repro.trace`) into "
+                         "DIR (default: <out>.traces/) and fold a "
+                         "trace_summary into each row")
     args = ap.parse_args(argv)
 
     spool = args.spool
@@ -611,13 +650,20 @@ def _main_run(argv) -> int:
         tag = f".shard{args.shard.replace('/', 'of')}" if args.shard else ""
         spool = f"{args.out}{tag}.spool.jsonl"
 
+    trace_dir = None
+    if args.trace is not None:
+        trace_dir = args.trace or f"{args.out}.traces"
+
     policies = args.policy.split(",") if args.policy else None
     cells = make_grid(args.grid, seed=args.seed, policies=policies,
                       budget=args.budget)
     art = run_campaign(cells, workers=args.workers, out_path=args.out,
                        grid_name=args.grid, spool_path=spool,
-                       resume=args.resume, shard=args.shard)
+                       resume=args.resume, shard=args.shard,
+                       trace_dir=trace_dir)
     _print_summary(art, args.out)
+    if trace_dir is not None:
+        print(f"  traces -> {trace_dir}/")
     return 0
 
 
