@@ -160,16 +160,21 @@ def campaign_throughput() -> Tuple[float, Dict]:
     every cell (replayed from the consolidation sim) plus each unique
     trace's planned (autoscaler-granted) capacity. The pre-vectorization
     reference loop and the new dispatch run the identical set, interleaved
-    min-of-3; ``speedup_x`` is the hot-path speedup the tentpole claims.
-    Also reports the jax scan/vmap batched core on constant-capacity
-    (dedicated-nodes) sweeps and end-to-end cells/sec for the small grid.
+    min-of-3; ``speedup_x`` is the hot-path speedup the dense sweep claims.
+    ``pw_*`` is the batched-device headline: a piecewise-heavy department
+    grid (every cell carries many capacity changes, the worst case for the
+    dense formulation) run through ``simulate_queue_batch`` shape buckets
+    vs the per-cell numpy event sweep, min-of-3 hot. Also reports the
+    constant-capacity batched core and end-to-end cells/sec for the small
+    grid through the chunked campaign pipeline.
     """
     from repro.core.simulator import ConsolidationSim
     from repro.core.traces import synthetic_sdsc_blue
     from repro.core.types import SLOConfig
     from repro.serving.batching import ServiceTimeModel
-    from repro.workloads import (RequestWorkload, make_trace,
-                                 simulate_queue, simulate_queue_many)
+    from repro.workloads import (QueueJob, RequestWorkload, make_trace,
+                                 simulate_queue, simulate_queue_batch,
+                                 simulate_queue_many)
     from repro.workloads.campaign import make_grid, run_campaign
 
     t0 = time.time()
@@ -230,6 +235,35 @@ def campaign_throughput() -> Tuple[float, Dict]:
     batched_s = time.perf_counter() - s
     batched_req = sum(len(tr) for tr in mtraces)
 
+    # piecewise-heavy department grid: the k(t)-aware batched core vs the
+    # per-cell numpy event sweep on cells with 5-20 capacity changes each
+    import numpy as _np
+    rng = _np.random.default_rng(7)
+    pw_horizon = 7200.0
+    pw_jobs = []
+    arrivals = ("poisson", "mmpp", "diurnal", "flash_crowd")
+    for seed in range(192):
+        tr = make_trace(arrivals[seed % 4], float(rng.uniform(0.1, 0.5)),
+                        pw_horizon, 500 + seed)
+        ev = [(0.0, int(rng.integers(1, 5)))]
+        for _ in range(int(rng.integers(5, 21))):
+            ev.append((float(rng.uniform(0.0, pw_horizon)),
+                       int(rng.integers(0, 5))))
+        pw_jobs.append(QueueJob(tr, tuple(ev), model, slo30,
+                                horizon=pw_horizon))
+    pw_req = sum(len(j.trace) for j in pw_jobs)
+    simulate_queue_batch(pw_jobs)                          # compile
+    pw_batched_s = pw_event_s = float("inf")
+    for _ in range(5):
+        s = time.perf_counter()
+        simulate_queue_batch(pw_jobs)
+        pw_batched_s = min(pw_batched_s, time.perf_counter() - s)
+        s = time.perf_counter()
+        for j in pw_jobs:
+            simulate_queue(j.trace, j.capacity_events, model, slo30,
+                           horizon=pw_horizon, impl="event")
+        pw_event_s = min(pw_event_s, time.perf_counter() - s)
+
     # end-to-end cells/sec through the full new pipeline
     art = run_campaign(cells, workers=1, grid_name="small")
     tp = art["throughput"]
@@ -243,8 +277,16 @@ def campaign_throughput() -> Tuple[float, Dict]:
         "speedup_x": round(ref_s / new_s, 2),
         "batched_requests_per_s": round(batched_req / batched_s),
         "batched_compile_s": round(compile_s, 2),
+        "pw_cells": len(pw_jobs),
+        "pw_requests": pw_req,
+        "pw_batched_requests_per_s": round(pw_req / pw_batched_s),
+        "pw_event_requests_per_s": round(pw_req / pw_event_s),
+        "pw_batched_cells_per_s": round(len(pw_jobs) / pw_batched_s, 1),
+        "pw_event_cells_per_s": round(len(pw_jobs) / pw_event_s, 1),
+        "pw_speedup_x": round(pw_event_s / pw_batched_s, 2),
         "small_cells_per_s": round(tp["cells_per_s"], 2),
         "small_queue_requests_per_s": round(tp["queue_requests_per_s"]),
+        "queue_impls": tp.get("queue_impls", {}),
     }
 
 

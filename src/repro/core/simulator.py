@@ -177,7 +177,8 @@ class ConsolidationSim:
     def __init__(self, cfg: SimConfig, jobs: Optional[List[Job]] = None,
                  ws_demand=None, horizon: float = 0.0, *,
                  tenants: Optional[Sequence[TenantSpec]] = None,
-                 policy=None, tracer: Optional[Tracer] = None):
+                 policy=None, tracer: Optional[Tracer] = None,
+                 defer_queue: bool = False):
         """Two calling conventions:
 
         * legacy / paper (degenerate 2-department): ``ConsolidationSim(cfg,
@@ -189,8 +190,19 @@ class ConsolidationSim:
           policy="paper"|"demand_capped"|"proportional_share"|instance)``.
           Each batch spec carries a job trace; each latency spec a demand
           timeseries or provider.
+
+        ``defer_queue=True`` skips the per-tenant request-queue simulation
+        in the results: each would-be ``realized_metrics`` call is recorded
+        in ``self.deferred_queue`` as ``(tenant_name, provider,
+        alloc_events)`` and the tenant's ``latency`` stays None, so a
+        caller owning many sims can dispatch every queue as one batched
+        device program (see ``workloads.campaign``). Queue metrics never
+        feed back into the consolidation dynamics, so deferral changes
+        nothing else about the run.
         """
         self.cfg = cfg
+        self.defer_queue = defer_queue
+        self.deferred_queue: List[Tuple[str, object, list]] = []
         self.horizon = horizon
         self.now = 0.0
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -575,8 +587,13 @@ class ConsolidationSim:
             res.preempted_nodes = rt.server.preempted_nodes
             if rt.provider is not None and \
                     hasattr(rt.provider, "realized_metrics"):
-                res.latency = rt.provider.realized_metrics(
-                    rt.server.alloc_events, horizon=horizon)
+                if self.defer_queue:
+                    self.deferred_queue.append(
+                        (rt.name, rt.provider,
+                         list(rt.server.alloc_events)))
+                else:
+                    res.latency = rt.provider.realized_metrics(
+                        rt.server.alloc_events, horizon=horizon)
         return res
 
     def _result(self) -> SimResult:

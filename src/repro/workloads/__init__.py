@@ -9,16 +9,20 @@ from repro.workloads.arrivals import (GENERATORS, RequestTrace,
                                       flash_crowd_arrivals, make_trace,
                                       mmpp_arrivals, poisson_arrivals)
 from repro.workloads.autoscaler import RequestWorkload, SLOAutoscaler
-from repro.workloads.queueing import (QueueMetrics, capacity_steps,
+from repro.workloads.queueing import (QueueJob, QueueMetrics,
+                                      capacity_steps, plan_queue_buckets,
                                       predicted_percentile_latency,
                                       sakasegawa_wait, simulate_queue,
+                                      simulate_queue_batch,
                                       simulate_queue_many,
                                       simulate_queue_reference)
 
 __all__ = [
     "GENERATORS", "RequestTrace", "burstiness_index", "diurnal_arrivals",
     "flash_crowd_arrivals", "make_trace", "mmpp_arrivals",
-    "poisson_arrivals", "RequestWorkload", "SLOAutoscaler", "QueueMetrics",
-    "capacity_steps", "predicted_percentile_latency", "sakasegawa_wait",
-    "simulate_queue", "simulate_queue_many", "simulate_queue_reference",
+    "poisson_arrivals", "RequestWorkload", "SLOAutoscaler", "QueueJob",
+    "QueueMetrics", "capacity_steps", "plan_queue_buckets",
+    "predicted_percentile_latency", "sakasegawa_wait", "simulate_queue",
+    "simulate_queue_batch", "simulate_queue_many",
+    "simulate_queue_reference",
 ]

@@ -30,6 +30,15 @@ request-level WS departments; ``2hpc2ws1be`` adds a best-effort batch
 tenant. Cells are independent; ``--workers N`` fans them out over
 processes (fork), falling back to in-process execution if a pool cannot
 start.
+
+WS request queues (v6): cells run in chunks and each chunk's queues —
+every tenant's realized allocation, constant and piecewise capacity alike
+— flush as ONE shape-bucketed ``jit(vmap(scan))`` device dispatch
+(``queue_impl='batched'``, float32, golden tolerance vs the exact paths;
+the per-impl split lands in the artifact's ``throughput.queue_impls``).
+``--queue-impl exact`` keeps the inline per-tenant float64 numpy sweep.
+Batched metrics are composition-independent — bucket shapes are pure
+per-cell functions — so chunking/sharding never changes a row.
 """
 from __future__ import annotations
 
@@ -53,9 +62,16 @@ from repro.core.types import SimConfig, SLOConfig, TenantSpec
 from repro.serving.batching import ServiceTimeModel
 from repro.workloads.arrivals import GENERATORS, make_trace
 from repro.workloads.autoscaler import RequestWorkload
-from repro.workloads.queueing import counters_delta, snapshot_counters
+from repro.workloads.queueing import (QueueJob, SIM_COUNTERS, counters_delta,
+                                      simulate_queue_batch,
+                                      snapshot_counters)
 
-SCHEMA = "phoenix-campaign-v5"
+SCHEMA = "phoenix-campaign-v6"
+
+# cells dispatched per batched queue flush: every WS tenant queue from a
+# chunk of sims rides one shape-bucketed device program (bigger chunks
+# amortize better; smaller chunks keep spool streaming fine-grained)
+QUEUE_CHUNK = 8
 
 # department mixes: name -> (n_hpc, n_ws, n_best_effort)
 MIXES: Dict[str, tuple] = {
@@ -82,6 +98,10 @@ class ScenarioCell:
     # per-department market budget (tokens over the horizon); 0 = unlimited.
     # When set, latency departments bid slo_elastic (v5 market axis).
     budget: float = 0.0
+    # WS request-queue backend (v6): "batched" defers every tenant queue to
+    # the shape-bucketed jit(vmap(scan)) device cores (float32, golden
+    # tolerance); "exact" keeps the inline per-tenant float64 numpy sweep.
+    queue_impl: str = "batched"
     seed: int = 0
 
     def cell_id(self) -> str:
@@ -97,7 +117,7 @@ class ScenarioCell:
         extra = [(tag, getattr(self, name))
                  for tag, name in (("r", "rate_rps"), ("h", "horizon_s"),
                                    ("j", "n_jobs"), ("x", "st_max_nodes"),
-                                   ("b", "budget"))
+                                   ("b", "budget"), ("q", "queue_impl"))
                  if getattr(self, name) != defaults[name]]
         if extra:
             base += "".join(f"-{tag}{v:g}" if isinstance(v, float)
@@ -144,15 +164,23 @@ def _policy_axis(policies: Optional[Sequence[str]],
 
 def make_grid(name: str, seed: int = 0,
               policies: Optional[Sequence[str]] = None,
-              budget: float = 0.0) -> List[ScenarioCell]:
+              budget: float = 0.0,
+              queue_impl: Optional[str] = None) -> List[ScenarioCell]:
     """Named grids. `tiny` is the CI smoke grid (8 cells, < 60 s serial);
     `mix_tiny` smokes the policy x department-mix matrix. ``policies``
     overrides each grid's policy axis (CLI ``--policy a,b,c``);
     ``budget`` sets every cell's per-department market budget (CLI
-    ``--budget``, 0 = unlimited)."""
+    ``--budget``, 0 = unlimited); ``queue_impl`` overrides every cell's
+    WS queue backend (CLI ``--queue-impl batched|exact``)."""
     cells = _make_grid_cells(name, seed, policies)
     if budget:
         cells = [dataclasses.replace(c, budget=budget) for c in cells]
+    if queue_impl is not None:
+        if queue_impl not in ("batched", "exact"):
+            raise ValueError(f"unknown queue_impl {queue_impl!r}; "
+                             "have batched/exact")
+        cells = [dataclasses.replace(c, queue_impl=queue_impl)
+                 for c in cells]
     return cells
 
 
@@ -265,19 +293,34 @@ def make_tenants(cell: ScenarioCell) -> List[TenantSpec]:
     return specs
 
 
-def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
-    """Run one scenario end-to-end; returns axes + metrics as a flat dict.
+class _PendingCell:
+    """A cell whose consolidation sim has run but whose WS request queues
+    are still waiting for the chunk's batched device dispatch."""
 
-    ``trace_dir`` (the runner's ``--trace``) enables control-plane
-    telemetry for the cell: the full causal trace is spooled to
-    ``<trace_dir>/<cell_id>.trace.jsonl`` and a compact summary
-    (reclaim-latency p50/p99, SLO-violation durations, spend attribution)
-    is folded into the row under ``trace_summary``. Tracing is a RUNNER
-    flag, not a cell field: cell_key — the spool/resume/merge identity —
-    is unchanged, and with tracing off the row is bit-identical to v5.
-    """
+    __slots__ = ("cell", "tracer", "res", "names", "jobs", "ws_requests",
+                 "peak", "queue_acct", "wall_start_s")
+
+    def __init__(self, cell, tracer, res, names, jobs, ws_requests, peak,
+                 queue_acct, wall_start_s):
+        self.cell = cell
+        self.tracer = tracer
+        self.res = res
+        self.names = names          # tenant name per deferred job
+        self.jobs = jobs            # List[QueueJob], same order
+        self.ws_requests = ws_requests
+        self.peak = peak
+        self.queue_acct = queue_acct    # counters delta of the start phase
+        self.wall_start_s = wall_start_s
+
+
+def _cell_start(cell: ScenarioCell,
+                trace_dir: Optional[str] = None) -> _PendingCell:
+    """Run one scenario's consolidation sim, deferring the WS request-queue
+    sims (``queue_impl='batched'``) so a chunk of cells can flush them as
+    one shape-bucketed device program."""
     t0 = time.time()
     q0 = snapshot_counters()
+    defer = cell.queue_impl == "batched"
     tracer = None
     if trace_dir is not None:
         tracer = Tracer(meta={"cell_id": cell.cell_id(),
@@ -297,20 +340,47 @@ def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
             trace=trace, model=ServiceTimeModel(),
             slo=SLOConfig(latency_target_s=cell.slo_target_s))
         sim = ConsolidationSim(cfg, jobs, workload, horizon=cell.horizon_s,
-                               tracer=tracer)
+                               tracer=tracer, defer_queue=defer)
         ws_requests = len(trace)
         peak = max((n for _, n in workload.demand_events(cell.horizon_s)),
                    default=0)
     else:
         tenants = make_tenants(cell)
         sim = ConsolidationSim(cfg, horizon=cell.horizon_s, tenants=tenants,
-                               policy=cell.policy, tracer=tracer)
+                               policy=cell.policy, tracer=tracer,
+                               defer_queue=defer)
         ws_requests = sum(len(s.demand.trace) for s in tenants
                           if s.kind == "latency")
         peak = sum(max((n for _, n in s.demand.demand_events(cell.horizon_s)),
                        default=0)
                    for s in tenants if s.kind == "latency")
     res = sim.run()
+
+    names: List[str] = []
+    qjobs: List[QueueJob] = []
+    for name, provider, alloc_events in sim.deferred_queue:
+        if not all(hasattr(provider, a) for a in ("trace", "model", "slo")):
+            # unknown provider: honor the deferral contract inline
+            res.tenants[name].latency = provider.realized_metrics(
+                alloc_events, horizon=cell.horizon_s)
+            continue
+        names.append(name)
+        qjobs.append(QueueJob(trace=provider.trace,
+                              capacity_events=tuple(alloc_events),
+                              model=provider.model, slo=provider.slo,
+                              horizon=cell.horizon_s))
+    return _PendingCell(cell, tracer, res, names, qjobs, ws_requests, peak,
+                        counters_delta(q0), time.time() - t0)
+
+
+def _cell_finish(p: _PendingCell, metrics: Sequence, tags: Sequence[str],
+                 queue_wall_s: float,
+                 trace_dir: Optional[str] = None) -> Dict:
+    """Attach the batch results for a pending cell's deferred queue jobs
+    (metrics/tags/queue_wall_s cover exactly ``p.jobs``) and build its row."""
+    cell, res = p.cell, p.res
+    for name, m in zip(p.names, metrics):
+        res.tenants[name].latency = m.as_dict()
 
     latency_res = [t for t in res.tenants.values() if t.kind == "latency"]
     lats = [t.latency or {} for t in latency_res]
@@ -320,11 +390,23 @@ def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
     def worst(key):     # headline latency metrics are worst-department
         return max((float(lat.get(key, 0.0)) for lat in lats), default=0.0)
 
-    qd = counters_delta(q0)
+    # queue accounting: inline sims from the start phase (counter deltas)
+    # plus this cell's share of the chunk's batched dispatch
+    qd = p.queue_acct
+    q_calls = int(qd["calls"]) + len(p.jobs)
+    q_requests = int(qd["requests"]) + sum(len(j.trace) for j in p.jobs)
+    q_seconds = float(qd["seconds"]) + queue_wall_s
+    impls = {k: int(qd[k]) for k in SIM_COUNTERS
+             if k not in ("calls", "requests", "seconds") and qd[k]}
+    for tag in tags:
+        impls[tag] = impls.get(tag, 0) + 1
+    wall_s = p.wall_start_s + queue_wall_s
+
     out = {k: getattr(cell, k) for k in AXIS_KEYS}
     out["cell_id"] = cell.cell_id()
     out["cell_key"] = cell.cell_key()
     out["seed"] = cell.seed
+    out["queue_impl"] = cell.queue_impl
     out["metrics"] = {
         "completed": res.completed,
         "killed": res.killed,
@@ -336,17 +418,18 @@ def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
         "ws_violation_rate": worst("violation_rate"),
         "ws_unserved": sum(int(lat.get("unserved", 0)) for lat in lats),
         "ws_unmet_node_seconds": res.ws_unmet_node_seconds,
-        "ws_peak_nodes": peak,
+        "ws_peak_nodes": p.peak,
         "st_avg_alloc": res.st_avg_alloc,
         "ws_avg_alloc": res.ws_avg_alloc,
-        "queue_sim_s": qd["seconds"],
-        "wall_s": time.time() - t0,
+        "queue_sim_s": q_seconds,
+        "wall_s": wall_s,
     }
-    out["ws_requests"] = ws_requests
+    out["ws_requests"] = p.ws_requests
     out["slo_met"] = slo_met
-    out["queue_sim"] = {"calls": int(qd["calls"]),
-                        "requests": int(qd["requests"]),
-                        "seconds": qd["seconds"]}
+    out["queue_sim"] = {"calls": q_calls,
+                        "requests": q_requests,
+                        "seconds": q_seconds,
+                        "impls": impls}
     out["tenant_metrics"] = {
         name: {"kind": t.kind, "priority": t.priority,
                "avg_alloc": t.avg_alloc,
@@ -360,16 +443,70 @@ def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
     # clearing prices; v5 adds the market ledger (budgets, remaining,
     # spend, clearing prices) for the budget engines
     out["policy_state"] = res.policy_state
-    if tracer is not None:
+    if p.tracer is not None:
         # optional keys only — absent with tracing off, excluded from
         # REDUCE_KEYS, so reductions and untraced artifacts are unchanged
         trace_file = os.path.join(trace_dir,
                                   f"{cell.cell_id()}.trace.jsonl")
-        tracer.to_jsonl(trace_file)
+        p.tracer.to_jsonl(trace_file)
         out["trace_file"] = trace_file
         out["trace_summary"] = summarize_events(
-            [tracer.header()] + tracer.events)
+            [p.tracer.header()] + p.tracer.events)
     return out
+
+
+def _flush_pending(pending: Sequence[_PendingCell],
+                   trace_dir: Optional[str] = None) -> List[Dict]:
+    """Dispatch every pending cell's deferred queue jobs as ONE batched
+    call, then finish all rows. The batch wall clock is apportioned to
+    cells by their request share (timing is reporting-only — it never
+    enters reductions, which stay independent of chunking)."""
+    all_jobs: List[QueueJob] = []
+    for p in pending:
+        all_jobs.extend(p.jobs)
+    tags: List[str] = []
+    t0 = time.time()
+    metrics = simulate_queue_batch(all_jobs, stats_out=tags) \
+        if all_jobs else []
+    queue_wall = time.time() - t0
+    total_req = sum(len(j.trace) for j in all_jobs) or 1
+    rows: List[Dict] = []
+    off = 0
+    for p in pending:
+        k = len(p.jobs)
+        share = queue_wall * sum(len(j.trace) for j in p.jobs) / total_req
+        rows.append(_cell_finish(p, metrics[off:off + k],
+                                 tags[off:off + k], share, trace_dir))
+        off += k
+    return rows
+
+
+def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
+    """Run one scenario end-to-end; returns axes + metrics as a flat dict.
+
+    ``trace_dir`` (the runner's ``--trace``) enables control-plane
+    telemetry for the cell: the full causal trace is spooled to
+    ``<trace_dir>/<cell_id>.trace.jsonl`` and a compact summary
+    (reclaim-latency p50/p99, SLO-violation durations, spend attribution)
+    is folded into the row under ``trace_summary``. Tracing is a RUNNER
+    flag, not a cell field: cell_key — the spool/resume/merge identity —
+    is unchanged, and with tracing off the row is bit-identical to an
+    untraced run.
+
+    Equivalent to ``run_cell_chunk([cell])[0]``: the batched queue path is
+    composition-independent (bucket shapes are pure per-cell functions of
+    n; e/k padding is value-invariant), so a cell's metrics are bitwise
+    the same whether its queues flush alone or with a chunk.
+    """
+    return _flush_pending([_cell_start(cell, trace_dir)], trace_dir)[0]
+
+
+def run_cell_chunk(cells: Sequence[ScenarioCell],
+                   trace_dir: Optional[str] = None) -> List[Dict]:
+    """Run a chunk of cells, flushing all their WS request queues as one
+    batched device dispatch. Row order matches ``cells``."""
+    pending = [_cell_start(c, trace_dir) for c in cells]
+    return _flush_pending(pending, trace_dir)
 
 
 # ------------------------------------------------------------- spooling
@@ -453,11 +590,18 @@ def reduce_metrics(results: List[Dict]) -> Dict:
 def _throughput(rows: Sequence[Dict], executed: int, skipped: int,
                 run_wall: float) -> Dict:
     """Cells/sec + queue-sim requests/sec over the rows' own accounting
-    (works identically for live runs and spool merges)."""
+    (works identically for live runs and spool merges). ``queue_impls``
+    counts queue-sim calls per implementation (v6), so BENCH numbers say
+    which path — ``jax_batched`` device cores vs the numpy sweeps —
+    actually served the campaign's queues."""
     q_req = sum(int(r.get("queue_sim", {}).get("requests", 0)) for r in rows)
     q_s = sum(float(r.get("queue_sim", {}).get("seconds", 0.0))
               for r in rows)
     cell_s = sum(float(r["metrics"].get("wall_s", 0.0)) for r in rows)
+    impls: Dict[str, int] = {}
+    for r in rows:
+        for k, v in r.get("queue_sim", {}).get("impls", {}).items():
+            impls[k] = impls.get(k, 0) + int(v)
     return {
         "executed": executed,
         "skipped": skipped,
@@ -467,6 +611,7 @@ def _throughput(rows: Sequence[Dict], executed: int, skipped: int,
         "queue_requests": q_req,
         "queue_sim_s": q_s,
         "queue_requests_per_s": q_req / q_s if q_s > 0 else 0.0,
+        "queue_impls": impls,
     }
 
 
@@ -476,22 +621,27 @@ def _throughput(rows: Sequence[Dict], executed: int, skipped: int,
 def _run_cells_streaming(cells: Sequence[ScenarioCell], workers: int,
                          spool_path: Optional[str],
                          trace_dir: Optional[str] = None) -> List[Dict]:
-    """Run cells, appending each finished row to the spool immediately so
-    an interrupted run loses at most the in-flight cells."""
+    """Run cells in QUEUE_CHUNK-sized chunks — each chunk flushes all its
+    WS request queues as one batched device dispatch — appending each
+    finished row to the spool immediately so an interrupted run loses at
+    most the in-flight chunk."""
     rows: List[Dict] = []
 
-    def emit(row: Dict) -> None:
-        rows.append(row)
-        if spool_path:
-            spool_append(spool_path, row)
+    def emit(chunk_rows: Sequence[Dict]) -> None:
+        for row in chunk_rows:
+            rows.append(row)
+            if spool_path:
+                spool_append(spool_path, row)
 
-    if workers > 1 and len(cells) > 1:
+    chunks = [list(cells[i:i + QUEUE_CHUNK])
+              for i in range(0, len(cells), QUEUE_CHUNK)]
+    if workers > 1 and len(chunks) > 1:
         try:
             from concurrent.futures import (ProcessPoolExecutor,
                                             as_completed)
             with ProcessPoolExecutor(max_workers=workers) as pool:
-                futs = {pool.submit(run_cell, c, trace_dir): c
-                        for c in cells}
+                futs = {pool.submit(run_cell_chunk, ch, trace_dir): ch
+                        for ch in chunks}
                 for fut in as_completed(futs):
                     emit(fut.result())
             return rows
@@ -500,8 +650,8 @@ def _run_cells_streaming(cells: Sequence[ScenarioCell], workers: int,
             print(f"[campaign] process pool unavailable ({e!r}); "
                   f"running serial", file=sys.stderr)
             rows = []
-    for c in cells:
-        emit(run_cell(c, trace_dir))
+    for ch in chunks:
+        emit(run_cell_chunk(ch, trace_dir))
     return rows
 
 
@@ -627,6 +777,12 @@ def _main_run(argv) -> int:
     ap.add_argument("--budget", type=float, default=0.0,
                     help="per-department market budget (tokens over the "
                          "horizon) for the budget engines; 0 = unlimited")
+    ap.add_argument("--queue-impl", default=None,
+                    choices=["batched", "exact"],
+                    help="WS request-queue backend: 'batched' (default) "
+                         "flushes each chunk's queues through the jit(vmap"
+                         "(scan)) device cores; 'exact' keeps the inline "
+                         "float64 numpy sweep per tenant")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="campaign.json")
@@ -656,7 +812,7 @@ def _main_run(argv) -> int:
 
     policies = args.policy.split(",") if args.policy else None
     cells = make_grid(args.grid, seed=args.seed, policies=policies,
-                      budget=args.budget)
+                      budget=args.budget, queue_impl=args.queue_impl)
     art = run_campaign(cells, workers=args.workers, out_path=args.out,
                        grid_name=args.grid, spool_path=spool,
                        resume=args.resume, shard=args.shard,
@@ -680,6 +836,9 @@ def _main_merge(argv) -> int:
                     help="the --policy subset the shards ran with")
     ap.add_argument("--budget", type=float, default=0.0,
                     help="the --budget the shards ran with")
+    ap.add_argument("--queue-impl", default=None,
+                    choices=["batched", "exact"],
+                    help="the --queue-impl the shards ran with")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--allow-partial", action="store_true",
                     help="merge even if grid cells are missing")
@@ -687,7 +846,9 @@ def _main_merge(argv) -> int:
 
     policies = args.policy.split(",") if args.policy else None
     grid_cells = make_grid(args.grid, seed=args.seed, policies=policies,
-                           budget=args.budget) if args.grid else None
+                           budget=args.budget,
+                           queue_impl=args.queue_impl) \
+        if args.grid else None
     art, missing = merge_spools(args.spools, grid_cells=grid_cells,
                                 grid_name=args.grid or "merged")
     if missing:

@@ -26,16 +26,19 @@ tests/test_queueing_equivalence.py):
                     capacity lookup inside a retry loop; kept as the
                     golden oracle and the benchmark baseline.
 
-``simulate_queue_many`` batches constant-capacity cells through one
-``jax.lax.scan``/``vmap`` core (float32 — golden-tolerance, not
-bit-identical), falling back to the exact numpy paths per cell when JAX is
-unavailable or capacity is piecewise.
+``simulate_queue_batch`` (and its ``simulate_queue_many`` wrapper) batches
+heterogeneous cells through shape-bucketed ``jit(vmap(lax.scan))`` device
+programs — a Kiefer–Wolfowitz core for constant capacity and a k(t)-aware
+sorted-slot core for piecewise capacity — with the metric fold fused on
+device (float32 — golden-tolerance, not bit-identical), falling back to the
+exact numpy paths per cell when JAX is unavailable.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import time
+from collections import OrderedDict
 from math import inf as _INF
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -51,6 +54,7 @@ from repro.workloads.arrivals import RequestTrace
 SIM_COUNTERS: Dict[str, float] = {
     "calls": 0, "requests": 0, "seconds": 0.0,
     "no_wait": 0, "constant": 0, "event": 0, "reference": 0,
+    "jax_batched": 0,
 }
 
 
@@ -444,7 +448,18 @@ def simulate_queue_reference(trace: RequestTrace,
 # ------------------------------------------------------- batched (JAX)
 
 
-_JAX_CORES: Dict[Tuple[int, int], object] = {}
+@dataclasses.dataclass(frozen=True)
+class QueueJob:
+    """One cell of a batched queue simulation (``simulate_queue_batch``)."""
+    trace: RequestTrace
+    capacity_events: Sequence[Tuple[float, int]]
+    model: ServiceTimeModel
+    slo: SLOConfig
+    horizon: Optional[float] = None
+
+
+_JAX_CORES: "OrderedDict[tuple, object]" = OrderedDict()
+_JAX_CORES_MAX = 32          # LRU bound on compiled cores per process
 
 
 def _jax_modules():
@@ -456,45 +471,388 @@ def _jax_modules():
         return None
 
 
-def _kw_batched_core(n_pad: int, k_pad: int):
-    """jit(vmap(scan)) Kiefer–Wolfowitz core for [B, n_pad] traces with
-    [B, k_pad] slot vectors; cached per padded shape bucket so a grid of
-    same-shape cells compiles once."""
-    key = (n_pad, k_pad)
+def _cached_core(key: tuple, build):
     core = _JAX_CORES.get(key)
-    if core is not None:
-        return core
-    mods = _jax_modules()
-    if mods is None:
-        return None
-    jax, jnp = mods
-
-    def one(t, s, free0, horizon):
-        def step(free, ts):
-            t_i, s_i = ts
-            m = jnp.min(free)
-            start = jnp.maximum(t_i, m)
-            ok = start < horizon
-            fin = start + s_i
-            free2 = free.at[jnp.argmin(free)].set(fin)
-            free = jnp.where(ok, free2, free)
-            lat = jnp.where(ok, fin - t_i, jnp.inf)
-            wait = jnp.where(ok, start - t_i, jnp.inf)
-            return free, (lat, wait)
-
-        _, (lat, wait) = jax.lax.scan(step, free0, (t, s))
-        return lat, wait
-
-    core = jax.jit(jax.vmap(one))
-    _JAX_CORES[key] = core
+    if core is None:
+        core = build()
+        _JAX_CORES[key] = core
+        while len(_JAX_CORES) > _JAX_CORES_MAX:
+            _JAX_CORES.popitem(last=False)
+    else:
+        _JAX_CORES.move_to_end(key)
     return core
 
 
-def _pad_pow2(n: int, floor: int = 256) -> int:
+# columns of the on-device metric fold, in order
+FOLD_COLS = ("n_served", "p50_s", "p95_s", "p99_s", "mean_s", "max_s",
+             "mean_wait_s", "violations")
+
+
+def _device_fold(jax, jnp, lat, wait, n_valid, slo_t):
+    """[n_pad] per-request arrays -> the FOLD_COLS row, on device.
+
+    Both padded rows and unserved requests carry inf latency; padding is
+    excluded from the violation count by the ``n_valid`` mask (it never
+    produces *finite* latency, so the served-side stats need no mask).
+    Percentiles reproduce numpy's 'linear' interpolation over the served
+    (finite) prefix of the sorted latencies — but without sorting: XLA's
+    CPU sort is ~40x slower than numpy's partition, so the order statistics
+    are selected exactly by binary search over the float32 bit space
+    (non-negative IEEE-754 floats are order-isomorphic to their integer
+    bits; 31 masked-count rounds pin the k-th smallest bit-exactly,
+    identically to sort-then-gather).  Only the three floor ranks are
+    searched; each ceil-rank statistic is either the same value (duplicate
+    run) or the smallest value strictly above it, recovered in one masked
+    min pass.
+    """
+    served = jnp.isfinite(lat)
+    m = jnp.sum(served)
+    mf = m.astype(lat.dtype)
+    bits = lat.view(jnp.int32)               # lat >= 0, so order-preserving
+    m1 = jnp.maximum(m - 1, 0)
+
+    # ranks lo/hi per percentile (0-indexed among ALL entries: the served
+    # latencies are exactly the m smallest, inf padding sorts last)
+    qs = jnp.asarray([50.0, 95.0, 99.0], dtype=lat.dtype)
+    pos = jnp.maximum(mf - 1.0, 0.0) * (qs / 100.0)
+    lo_r = jnp.floor(pos).astype(jnp.int32)
+    hi_r = jnp.minimum(lo_r + 1, m1)
+
+    def select(st, _):
+        # invariant: kth-smallest bits in (lb, ub]; probe the midpoint
+        lb, ub = st
+        mid = lb + ((ub - lb) >> 1)    # lb+ub would overflow int32
+        cnt = jnp.sum(bits[None, :] <= mid[:, None], axis=1)
+        take = cnt >= lo_r + 1               # kth smallest <= mid
+        ub = jnp.where(take, mid, ub)
+        lb = jnp.where(take, lb, mid)
+        return (lb, ub), None
+
+    lb0 = jnp.full((3,), -1, dtype=jnp.int32)
+    ub0 = jnp.full((3,), np.float32(np.inf).view(np.int32).item(),
+                   dtype=jnp.int32)
+    (_, ub), _ = jax.lax.scan(select, (lb0, ub0), None, length=31)
+    lo_stat = ub.view(lat.dtype)             # [3] exact floor-rank stats
+    # ceil-rank stat: ranks lo_r..(count<=lo_stat)-1 all equal lo_stat, so
+    # hi_r lands on lo_stat unless it is the first strictly-larger value
+    above = lat[None, :] > lo_stat[:, None]
+    c_le = jnp.sum(~above, axis=1)
+    next_up = jnp.min(jnp.where(above, lat[None, :], jnp.inf), axis=1)
+    hi_stat = jnp.where(hi_r <= c_le - 1, lo_stat, next_up)
+    frac = pos - lo_r.astype(lat.dtype)
+    pcts = lo_stat * (1.0 - frac) + hi_stat * frac
+
+    denom = jnp.maximum(mf, 1.0)
+    mean = jnp.sum(jnp.where(served, lat, 0.0)) / denom
+    mx = jnp.max(jnp.where(served, lat, -jnp.inf))
+    mean_w = jnp.sum(jnp.where(served, wait, 0.0)) / denom
+    valid = jnp.arange(lat.shape[0]) < n_valid
+    viol = jnp.sum(valid & (~served | (lat > slo_t)))
+    return jnp.concatenate([
+        jnp.stack([mf]), pcts,
+        jnp.stack([mean, mx, mean_w, viol.astype(lat.dtype)])])
+
+
+def _kw_batched_core(n_pad: int, k_pad: int):
+    """jit(vmap(scan)) Kiefer–Wolfowitz core for constant-capacity cells:
+    [B, n_pad] traces, [B, k_pad] slot-free-time vectors (slots beyond a
+    cell's k are pinned to inf), metric fold fused on device so the host
+    transfer is one [B, len(FOLD_COLS)] block."""
+    mods = _jax_modules()
+    if mods is None:                                     # pragma: no cover
+        return None
+    jax, jnp = mods
+
+    def build():
+        def one(t, s, free0, horizon, n_valid, slo_t):
+            def body(free, t_i, s_i):
+                start = jnp.maximum(t_i, jnp.min(free))
+                ok = start < horizon
+                fin = start + s_i
+                free2 = free.at[jnp.argmin(free)].set(fin)
+                free = jnp.where(ok, free2, free)
+                lat = jnp.where(ok, fin - t_i, jnp.inf)
+                wait = jnp.where(ok, start - t_i, jnp.inf)
+                return free, lat, wait
+
+            def step(free, ts):
+                t_c, s_c = ts               # [_UNROLL] requests per step
+                lats, waits = [], []
+                for c in range(_UNROLL):
+                    free, lat, wait = body(free, t_c[c], s_c[c])
+                    lats.append(lat)
+                    waits.append(wait)
+                return free, (jnp.stack(lats), jnp.stack(waits))
+
+            _, (lat, wait) = jax.lax.scan(
+                step, free0, (t.reshape(-1, _UNROLL),
+                              s.reshape(-1, _UNROLL)))
+            return _device_fold(jax, jnp, lat.reshape(-1),
+                                wait.reshape(-1), n_valid, slo_t)
+
+        return jax.jit(jax.vmap(one))
+
+    return _cached_core(("const", n_pad, k_pad), build)
+
+
+def _pw_batched_core(n_pad: int, e_pad: int, k_pad: int):
+    """jit(vmap(scan)) core for piecewise capacity k(t).
+
+    Per cell the capacity is padded step arrays [e_pad] (change times,
+    slot levels, next-change times); the carry is the sorted ascending
+    vector of the k_pad slot finish times plus the FIFO commit point
+    ``prev_start``. Per request the earliest feasible start within
+    interval e is when fewer than k_e slots are still busy — with sorted
+    ``free`` that threshold is the (K - k_e)-th entry — clipped to the
+    interval; the served request drops the earliest finish time (<= start
+    by feasibility) and inserts its own, keeping the carry sorted.
+
+    Unserved semantics follow the golden oracle exactly: the reference
+    loop's blocked search pops the *shared* busy heap while walking
+    forward, and the pops persist. Its terminal states leave the heap
+    holding precisely the finish times >= horizon, so an unserved request
+    whose queue-adjusted arrival is still inside the horizon zeroes every
+    slot finishing before the horizon (zeros keep the carry sorted).
+    """
+    mods = _jax_modules()
+    if mods is None:                                     # pragma: no cover
+        return None
+    jax, jnp = mods
+    K = k_pad
+
+    def build():
+        def one(t, s, cap_t, cap_k, hi_t, horizon, n_valid, slo_t):
+            j = jnp.arange(K)
+            # loop-invariant interval tables, hoisted out of the scan
+            gi = jnp.clip(K - cap_k, 0, K - 1)
+            closed = cap_k <= 0
+
+            def body(carry, t_i, s_i):
+                free, prev_start = carry
+                s0 = jnp.maximum(t_i, prev_start)
+                thresh = jnp.where(closed, jnp.inf, free[gi])
+                lo = jnp.maximum(jnp.maximum(cap_t, thresh), s0)
+                cand = jnp.where(lo < hi_t, lo, jnp.inf)
+                start = jnp.min(cand)
+                served = start < horizon
+                fin = start + s_i
+                g = free[1:]
+                pos = jnp.sum(g < fin)
+                g_up = jnp.concatenate([g, jnp.full((1,), jnp.inf,
+                                                    g.dtype)])
+                g_dn = jnp.concatenate([jnp.zeros((1,), g.dtype), g])
+                merged = jnp.where(j < pos, g_up,
+                                   jnp.where(j == pos, fin, g_dn))
+                drained = (~served) & (s0 < horizon)
+                free_u = jnp.where(drained & (free < horizon), 0.0, free)
+                free2 = jnp.where(served, merged, free_u)
+                prev2 = jnp.where(served, start, prev_start)
+                lat = jnp.where(served, fin - t_i, jnp.inf)
+                wait = jnp.where(served, start - t_i, jnp.inf)
+                return (free2, prev2), lat, wait
+
+            def step(carry, ts):
+                t_c, s_c = ts               # [_UNROLL] requests per step
+                lats, waits = [], []
+                for c in range(_UNROLL):
+                    carry, lat, wait = body(carry, t_c[c], s_c[c])
+                    lats.append(lat)
+                    waits.append(wait)
+                return carry, (jnp.stack(lats), jnp.stack(waits))
+
+            (_, _), (lat, wait) = jax.lax.scan(
+                step, (jnp.zeros((K,), t.dtype), jnp.zeros((), t.dtype)),
+                (t.reshape(-1, _UNROLL), s.reshape(-1, _UNROLL)))
+            return _device_fold(jax, jnp, lat.reshape(-1),
+                                wait.reshape(-1), n_valid, slo_t)
+
+        return jax.jit(jax.vmap(one))
+
+    return _cached_core(("pw", n_pad, e_pad, k_pad), build)
+
+
+# requests consumed per scan step: amortizes the fixed per-step cost of
+# the XLA loop (~2-3us on CPU, which otherwise dominates small batches)
+# over several Kiefer–Wolfowitz updates. n_pad is always a multiple of it.
+_UNROLL = 8
+
+
+def _pad_bucket(n: int, floor: int) -> int:
+    """Smallest grid point >= n on the half-pow2 grid {p, 1.5p, 2p}:
+    per-cell padding waste stays under 50% (above ``floor``) while cells
+    of similar size share a bucket — one compiled core, one batch — and
+    the number of distinct compiled shapes stays logarithmic."""
+    if n <= floor:
+        return floor
+    p = floor
+    while p * 2 < n:
+        p *= 2
+    if p * 3 // 2 >= n:
+        return p * 3 // 2
+    return p * 2
+
+
+def _pad_pow2(n: int, floor: int) -> int:
+    """Smallest power-of-two grid point >= n. Used for the e/k axes of
+    the bucket key: padding there only adds elementwise work (values are
+    invariant — padded intervals are empty, padded slots hold inf), so a
+    coarser band merges more cells per bucket, and per-step loop overhead
+    amortizes over a bigger batch."""
     p = floor
     while p < n:
         p *= 2
     return p
+
+
+def _job_horizon(job: QueueJob) -> float:
+    if job.horizon is not None:
+        return float(job.horizon)
+    return float(job.trace.t[-1]) + 1e9 if len(job.trace) else 0.0
+
+
+def _plan(jobs: Sequence[QueueJob]):
+    """Bucket jobs by kind and padded trace length; returns (buckets,
+    caps) where caps[i] is job i's ``capacity_steps`` arrays.
+
+    Only ``n_pad`` is part of the key: the on-device fold reduces over the
+    n axis, so a cell's float32 metrics depend on its n_pad (reduction
+    tree shape) and that must stay a pure function of the cell alone —
+    shard merges must stay bit-identical to single-shot campaign runs.
+    The e/k axes are padded at dispatch time to the batch maximum instead:
+    padding there is exactly value-invariant per lane (padded intervals
+    start at +inf and never produce a candidate, padded slots only add
+    zeros below the sorted free list, and gather/min/count ops on them are
+    elementwise), so co-batching cells with different e/k changes the
+    compiled shape but not one bit of any lane's result."""
+    buckets: Dict[tuple, List[int]] = {}
+    caps: List[Optional[tuple]] = [None] * len(jobs)
+    for i, job in enumerate(jobs):
+        n = len(job.trace)
+        if n == 0:
+            continue
+        cap_t, cap_k = capacity_steps(job.capacity_events,
+                                      job.model.slots_per_replica)
+        caps[i] = (cap_t, cap_k)
+        kind = "const" if len(cap_t) == 1 else "pw"
+        buckets.setdefault((kind, _pad_bucket(n, 256)), []).append(i)
+    return buckets, caps
+
+
+def plan_queue_buckets(jobs: Sequence[QueueJob]) -> Dict[tuple, List[int]]:
+    """Public view of the shape-bucket plan: {key: [job indices]}.
+
+    Keys are ("const", n_pad) or ("pw", n_pad); a bucket's padded element
+    count is ``len(rows) * n_pad``. Jobs with empty traces are handled on
+    host and appear in no bucket."""
+    return _plan(jobs)[0]
+
+
+def _metrics_from_fold(n: int, cols: np.ndarray,
+                       slo: SLOConfig) -> QueueMetrics:
+    m = int(cols[0])
+    if m == 0:
+        return QueueMetrics(n, 0, np.inf, np.inf, np.inf, np.inf, np.inf,
+                            np.inf, 1.0, False, n)
+    viol = float(cols[7]) / n
+    return QueueMetrics(n, m, float(cols[1]), float(cols[2]),
+                        float(cols[3]), float(cols[4]), float(cols[5]),
+                        float(cols[6]), viol,
+                        viol <= slo.max_violation_rate, n - m)
+
+
+def simulate_queue_batch(jobs: Sequence[QueueJob], backend: str = "auto",
+                         stats_out: Optional[List[str]] = None
+                         ) -> List[QueueMetrics]:
+    """Batched FIFO M/G/k(t) simulation over heterogeneous cells.
+
+    Jobs are grouped into padded shape buckets and dispatched as
+    ``jit(vmap(lax.scan))`` device programs — constant-capacity cells on
+    the Kiefer–Wolfowitz core, piecewise-capacity cells on the k(t)-aware
+    sorted-slot core — with the metric fold fused on device (float32:
+    metrics agree with the exact paths to golden tolerance, not bitwise).
+    Falls back to the exact per-cell ``simulate_queue`` dispatch when JAX
+    is unavailable or ``backend='numpy'``. Results come back in input
+    order; ``stats_out``, when given, receives one impl tag per job
+    ("jax_batched" or "numpy")."""
+    if backend not in ("auto", "jax", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}")
+    out: List[Optional[QueueMetrics]] = [None] * len(jobs)
+    tags = ["numpy"] * len(jobs)
+    use_jax = backend != "numpy" and _jax_modules() is not None
+    buckets, caps = _plan(jobs) if use_jax else ({}, [None] * len(jobs))
+    on_device = {i for rows in buckets.values() for i in rows}
+    for i, job in enumerate(jobs):
+        if i not in on_device:
+            out[i] = simulate_queue(job.trace, job.capacity_events,
+                                    job.model, job.slo,
+                                    horizon=job.horizon)
+    if not buckets:
+        if stats_out is not None:
+            stats_out.extend(tags)
+        return out  # type: ignore[return-value]
+
+    t0_wall = time.perf_counter()
+    _, jnp = _jax_modules()
+    n_req = 0
+    for key, rows in sorted(buckets.items()):
+        kind, n_pad = key[0], key[1]
+        B = len(rows)
+        t_b = np.full((B, n_pad), np.inf, dtype=np.float32)
+        s_b = np.zeros((B, n_pad), dtype=np.float32)
+        hz = np.empty(B, dtype=np.float32)
+        nv = np.empty(B, dtype=np.int32)
+        st = np.empty(B, dtype=np.float32)
+        for r, i in enumerate(rows):
+            job = jobs[i]
+            tr = job.trace
+            n = len(tr)
+            t_b[r, :n] = tr.t
+            s_b[r, :n] = job.model.service_times(tr.prompt_tokens,
+                                                 tr.decode_tokens)
+            hz[r] = _job_horizon(job)
+            nv[r] = n
+            st[r] = job.slo.latency_target_s
+        if kind == "const":
+            k_pad = _pad_pow2(max(max(int(caps[i][1][0]), 1)
+                                  for i in rows), 8)
+            free0 = np.zeros((B, k_pad), dtype=np.float32)
+            for r, i in enumerate(rows):
+                free0[r, int(caps[i][1][0]):] = np.inf
+            core = _kw_batched_core(n_pad, k_pad)
+            res = core(jnp.asarray(t_b), jnp.asarray(s_b),
+                       jnp.asarray(free0), jnp.asarray(hz),
+                       jnp.asarray(nv), jnp.asarray(st))
+        else:
+            e_pad = -8 * (-max(len(caps[i][0]) for i in rows) // 8)
+            k_pad = -8 * (-max(max(int(caps[i][1].max()), 1)
+                               for i in rows) // 8)
+            ct_b = np.full((B, e_pad), np.inf, dtype=np.float32)
+            hi_b = np.full((B, e_pad), np.inf, dtype=np.float32)
+            ck_b = np.zeros((B, e_pad), dtype=np.int32)
+            for r, i in enumerate(rows):
+                cap_t, cap_k = caps[i]
+                e = len(cap_t)
+                ct_b[r, :e] = cap_t
+                ck_b[r, :e] = cap_k
+                hi_b[r, :e - 1] = cap_t[1:]
+            core = _pw_batched_core(n_pad, e_pad, k_pad)
+            res = core(jnp.asarray(t_b), jnp.asarray(s_b),
+                       jnp.asarray(ct_b), jnp.asarray(ck_b),
+                       jnp.asarray(hi_b), jnp.asarray(hz),
+                       jnp.asarray(nv), jnp.asarray(st))
+        res = np.asarray(res, dtype=np.float64)          # [B, FOLD_COLS]
+        for r, i in enumerate(rows):
+            out[i] = _metrics_from_fold(len(jobs[i].trace), res[r],
+                                        jobs[i].slo)
+            tags[i] = "jax_batched"
+            n_req += len(jobs[i].trace)
+    SIM_COUNTERS["calls"] += len(on_device)
+    SIM_COUNTERS["requests"] += n_req
+    SIM_COUNTERS["seconds"] += time.perf_counter() - t0_wall
+    SIM_COUNTERS["jax_batched"] += len(on_device)
+    if stats_out is not None:
+        stats_out.extend(tags)
+    return out  # type: ignore[return-value]
 
 
 def simulate_queue_many(traces: Sequence[RequestTrace],
@@ -503,74 +861,13 @@ def simulate_queue_many(traces: Sequence[RequestTrace],
                         slo: SLOConfig,
                         horizon: Optional[float] = None,
                         backend: str = "auto") -> List[QueueMetrics]:
-    """Batched FIFO queue simulation over many grid cells.
-
-    Constant-capacity cells are padded to shared [B, N] blocks and run
-    through one ``jax.lax.scan``/``vmap`` Kiefer–Wolfowitz core (float32:
-    metrics agree with the exact paths to golden tolerance, not bitwise).
-    Piecewise-capacity cells — and everything when JAX is unavailable or
-    ``backend='numpy'`` — fall back to the exact per-cell ``simulate_queue``
-    dispatch. Results come back in input order.
-    """
-    if backend not in ("auto", "jax", "numpy"):
-        raise ValueError(f"unknown backend {backend!r}")
+    """Batched FIFO queue simulation over many grid cells sharing one
+    model/slo/horizon — a thin wrapper over ``simulate_queue_batch``."""
     if len(traces) != len(capacities):
         raise ValueError("traces and capacities must align")
-    out: List[Optional[QueueMetrics]] = [None] * len(traces)
-
-    batch: List[int] = []
-    ks: List[int] = []              # constant slot count per batched cell
-    if backend != "numpy" and _jax_modules() is not None:
-        for i, ev in enumerate(capacities):
-            _, cap_k = capacity_steps(ev, model.slots_per_replica)
-            if len(traces[i]) and np.all(cap_k == cap_k[0]):
-                batch.append(i)
-                ks.append(int(cap_k[0]))
-    batched = set(batch)
-    for i in range(len(traces)):
-        if i not in batched:
-            out[i] = simulate_queue(traces[i], capacities[i], model, slo,
-                                    horizon=horizon)
-    if not batch:
-        return out  # type: ignore[return-value]
-
-    t0_wall = time.perf_counter()
-    _, jnp = _jax_modules()
-    n_pad = _pad_pow2(max(len(traces[i]) for i in batch))
-    k_pad = max(1, max(ks))
-    core = _kw_batched_core(n_pad, k_pad)
-
-    B = len(batch)
-    t_b = np.full((B, n_pad), np.inf, dtype=np.float32)
-    s_b = np.zeros((B, n_pad), dtype=np.float32)
-    free0 = np.zeros((B, k_pad), dtype=np.float32)
-    hz = np.empty(B, dtype=np.float32)
-    for row, i in enumerate(batch):
-        tr = traces[i]
-        n = len(tr)
-        svc = model.service_times(tr.prompt_tokens, tr.decode_tokens)
-        t_b[row, :n] = tr.t
-        s_b[row, :n] = svc
-        free0[row, ks[row]:] = np.inf          # slots beyond k never free
-        h = horizon
-        if h is None:
-            h = float(tr.t[-1]) + 1e9 if n else 0.0
-        hz[row] = h
-    lat_b, wait_b = core(jnp.asarray(t_b), jnp.asarray(s_b),
-                         jnp.asarray(free0), jnp.asarray(hz))
-    lat_b = np.asarray(lat_b, dtype=np.float64)
-    wait_b = np.asarray(wait_b, dtype=np.float64)
-    for row, i in enumerate(batch):
-        n = len(traces[i])
-        lat = lat_b[row, :n]
-        unserved = int((~np.isfinite(lat)).sum())
-        out[i] = _metrics(n, lat, wait_b[row, :n], unserved, slo)
-    n_req = sum(len(traces[i]) for i in batch)
-    SIM_COUNTERS["calls"] += len(batch)
-    SIM_COUNTERS["requests"] += n_req
-    SIM_COUNTERS["seconds"] += time.perf_counter() - t0_wall
-    SIM_COUNTERS["constant"] += len(batch)
-    return out  # type: ignore[return-value]
+    jobs = [QueueJob(tr, ev, model, slo, horizon)
+            for tr, ev in zip(traces, capacities)]
+    return simulate_queue_batch(jobs, backend=backend)
 
 
 # ------------------------------------------------- analytic approximation

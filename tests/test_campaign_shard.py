@@ -37,12 +37,13 @@ def test_cell_key_covers_all_fields():
                         slo_target_s=30.0)
     for field in ("rate_rps", "horizon_s", "n_jobs", "st_max_nodes",
                   "preempt", "arrival", "total_nodes", "slo_target_s",
-                  "policy", "mix", "budget", "seed"):
+                  "policy", "mix", "budget", "queue_impl", "seed"):
         bumped = {"rate_rps": 3.5, "horizon_s": 999.0, "n_jobs": 7,
                   "st_max_nodes": 5, "preempt": "checkpoint",
                   "arrival": "mmpp", "total_nodes": 49,
                   "slo_target_s": 31.0, "policy": "demand_capped",
-                  "mix": "2hpc2ws", "budget": 5000.0, "seed": 1}[field]
+                  "mix": "2hpc2ws", "budget": 5000.0,
+                  "queue_impl": "exact", "seed": 1}[field]
         other = dataclasses.replace(base, **{field: bumped})
         assert other.cell_key() != base.cell_key(), field
         assert other.cell_id() != base.cell_id(), field
@@ -132,16 +133,20 @@ def test_resume_runs_only_missing_cells(tmp_path):
     assert art2["reductions"] == art["reductions"]
 
 
-def test_run_campaign_writes_v5_artifact(tmp_path):
+def test_run_campaign_writes_v6_artifact(tmp_path):
     out = tmp_path / "c.json"
     art = run_campaign(FAST_CELLS[:2], workers=1, out_path=str(out),
                        grid_name="unit")
     disk = json.loads(out.read_text())
-    assert disk["schema"] == "phoenix-campaign-v5"
+    assert disk["schema"] == "phoenix-campaign-v6"
     assert "throughput" in disk and disk["throughput"]["executed"] == 2
     assert disk["cells"][0]["queue_sim"]["requests"] > 0
     assert disk["cells"][0]["metrics"]["queue_sim_s"] >= 0.0
     assert art["reductions"] == disk["reductions"]
+    # v6: per-impl attribution on the row and aggregated in throughput
+    assert disk["cells"][0]["queue_impl"] == "batched"
+    impls = disk["throughput"]["queue_impls"]
+    assert sum(impls.values()) >= 2 and "jax_batched" in impls
 
 
 # ------------------------------------------------- v5 market artifact path
@@ -174,7 +179,7 @@ def test_merge_refuses_stale_schema_spools(tmp_path):
     assert merged["n_cells"] == 0
     # while a current-schema spool folds cleanly
     assert old_key(FAST_CELLS[0]) != FAST_CELLS[0].cell_key()
-    assert SCHEMA == "phoenix-campaign-v5"
+    assert SCHEMA == "phoenix-campaign-v6"
 
 
 def test_market_policy_state_survives_shard_merge_bit_for_bit(tmp_path):
