@@ -29,6 +29,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional
 
+from repro.core.nodes import DRAIN_POOL, NodeInventory, NodeState
 from repro.core.policies import (CooperativePolicy, PaperPolicy,
                                  PolicyEngine, Tenant, get_policy)
 from repro.core.telemetry import NULL_TRACER, Tracer
@@ -49,6 +50,20 @@ class TenantProvisionService:
         self.tenants: Dict[str, Tenant] = {}
         self.tracer = NULL_TRACER
         self.set_tracer(tracer or NULL_TRACER)
+        # node-lifecycle layer (optional): an attached NodeInventory
+        # mirrors every count move with identified nodes; None keeps the
+        # pure count machine (zero overhead, the paper's model)
+        self.inventory: Optional[NodeInventory] = None
+        # forced-reclaim drain windows: nodes mid-drain serve neither the
+        # victim nor the claimant; configure_drain wires the clock owner
+        self.draining = 0
+        self.drain_time_s = 0.0
+        self._drain_schedule: Optional[
+            Callable[[float, Callable[[], None]], None]] = None
+        # FIFO of open node_fail spans for the count-only path (constant
+        # repair delay => FIFO pairing is exact); with an inventory the
+        # span rides on the Node record instead
+        self._fail_span_fifo: List[int] = []
 
     def set_tracer(self, tracer: Tracer) -> None:
         """Point the service AND its engine (and the engine's market, for
@@ -63,9 +78,31 @@ class TenantProvisionService:
     # ------------------------------------------------------------- wiring
     def register(self, tenant: Tenant) -> Tenant:
         assert tenant.name not in self.tenants, tenant.name
-        assert tenant.name != "free", "'free' is the reserved pool name"
+        assert tenant.name not in ("free", DRAIN_POOL), \
+            f"{tenant.name!r} is a reserved pool name"
         self.tenants[tenant.name] = tenant
         return tenant
+
+    def attach_inventory(self, inventory: NodeInventory) -> None:
+        """Mirror every count move into an identified-node inventory.
+        Must happen before any provisioning (all nodes free) so pools and
+        counts start — and stay — in lockstep."""
+        assert inventory.total == self.total, \
+            (inventory.total, self.total)
+        assert self.free == self.total, \
+            "attach_inventory before any provisioning"
+        self.inventory = inventory
+
+    def configure_drain(self, drain_time_s: float,
+                        schedule: Callable[[float, Callable[[], None]],
+                                           None]) -> None:
+        """Enable reclaim drain windows: each forced reclaim step's nodes
+        sit in the drain pool for ``drain_time_s`` (serving neither
+        tenant) before the claimant receives them. ``schedule(delay, fn)``
+        is the clock owner's callback (the simulator pushes a DRAIN_DONE
+        event). 0 disables (instant handover, the paper's assumption)."""
+        self.drain_time_s = float(drain_time_s)
+        self._drain_schedule = schedule if drain_time_s > 0 else None
 
     def register_spec(self, spec: TenantSpec, *,
                       on_grant: Optional[Callable[[int], None]] = None,
@@ -85,8 +122,9 @@ class TenantProvisionService:
     # ----------------------------------------------------------- invariants
     def check(self):
         used = sum(t.alloc for t in self.tenants.values())
-        assert used + self.free == self.total, (used, self.free, self.total)
-        assert self.free >= 0
+        assert used + self.free + self.draining == self.total, \
+            (used, self.free, self.draining, self.total)
+        assert self.free >= 0 and self.draining >= 0
         assert all(t.alloc >= 0 for t in self.tenants.values()), \
             {t.name: t.alloc for t in self.tenants.values()}
         if self.policy.demand_driven and self.policy.demand_satiating:
@@ -129,13 +167,21 @@ class TenantProvisionService:
             return 0
         tr = self.tracer
         traced = tr.enabled
+        inv = self.inventory
+        # drain windows apply to forced reclaims only: free-pool nodes are
+        # already idle and hand over instantly
+        drain_s = self.drain_time_s if self._drain_schedule is not None \
+            else 0.0
         claim_span = tr.new_span() if traced else 0
         granted = min(self.free, n)
         self.free -= granted
         t.alloc += granted
+        if inv is not None and granted > 0:
+            inv.transfer("free", name, granted)
         short = n - granted
         deficit = short
         surplus = 0
+        pending = 0
         plan_span = 0
         if short > 0:
             plan = self.policy.plan_reclaim(
@@ -183,18 +229,47 @@ class TenantProvisionService:
                     continue        # unwired batch tenant: not reclaimable
                 v.alloc -= got
                 give = min(got, short)
-                t.alloc += give
                 short -= give
                 surplus += got - give
                 # full release for drain stats, `give` for money engines
                 self.policy.note_reclaimed(v.name, got, granted=give)
+                step_span = 0
+                if drain_s > 0.0 and give > 0:
+                    # reclaimed nodes pay the drain window before the
+                    # claimant sees them: they serve neither tenant until
+                    # _drain_done fires (the deficit is committed — short
+                    # already dropped — but delivery is delayed)
+                    self.draining += give
+                    pending += give
+                    step_span = tr.new_span() if traced else 0
+                    ids = None
+                    if inv is not None:
+                        ids = inv.transfer(v.name, DRAIN_POOL, give,
+                                           state=NodeState.DRAINING,
+                                           parent=step_span or None)
+                    self._drain_schedule(
+                        drain_s,
+                        lambda c=name, g=give, i=ids, s=step_span:
+                            self._drain_done(c, g, i, s))
+                else:
+                    t.alloc += give
+                    if inv is not None and give > 0:
+                        inv.transfer(v.name, name, give)
+                if inv is not None and got - give > 0:
+                    inv.transfer(v.name, "free", got - give)
                 if traced:
                     evs = tr.events
                     if len(evs) < tr.max_events:
-                        evs.append({"type": "reclaim_step", "ts": tr.now,
-                                    "parent": plan_span, "tenant": v.name,
-                                    "claimant": name, "asked": take,
-                                    "released": got, "granted": give})
+                        ev = {"type": "reclaim_step", "ts": tr.now,
+                              "parent": plan_span, "tenant": v.name,
+                              "claimant": name, "asked": take,
+                              "released": got, "granted": give}
+                        if step_span:
+                            # drain-delayed step: its span is the parent
+                            # the eventual drain_complete links back to
+                            ev["span"] = step_span
+                            ev["drain_s"] = drain_s
+                        evs.append(ev)
                     else:
                         tr.dropped_events += 1
         if traced:
@@ -202,11 +277,16 @@ class TenantProvisionService:
             # decision instant; `short` here is the FINAL unmet remainder
             evs = tr.events
             if len(evs) < tr.max_events:
-                evs.append({"type": "claim", "ts": tr.now,
-                            "span": claim_span, "tenant": name,
-                            "requested": n, "from_free": granted,
-                            "deficit": deficit, "granted": n - short,
-                            "short": short})
+                ev = {"type": "claim", "ts": tr.now,
+                      "span": claim_span, "tenant": name,
+                      "requested": n, "from_free": granted,
+                      "deficit": deficit, "granted": n - short,
+                      "short": short}
+                if pending:
+                    # committed but still draining — delivered later by
+                    # drain_complete events (granted includes pending)
+                    ev["pending"] = pending
+                evs.append(ev)
             else:
                 tr.dropped_events += 1
             tr.last_claim_span[name] = claim_span
@@ -219,7 +299,31 @@ class TenantProvisionService:
                            "nodes": surplus})
             self.provision_idle()
         self.check()
-        return n - short
+        return n - short - pending
+
+    def _drain_done(self, claimant: str, n: int,
+                    ids: Optional[List[int]], step_span: int) -> None:
+        """A reclaim step's drain window elapsed: deliver the surviving
+        nodes to the claimant. With an inventory attached, nodes that
+        failed mid-drain (drain_node_failed) are skipped — only ids still
+        in the drain pool are credited."""
+        inv = self.inventory
+        if inv is not None:
+            ids = [i for i in ids if inv.nodes[i].owner == DRAIN_POOL]
+            n = len(ids)
+            if n:
+                inv.move_nodes(ids, claimant, state=NodeState.HEALTHY,
+                               parent=step_span or None)
+        self.draining -= n
+        t = self.tenants[claimant]
+        t.alloc += n
+        if self.tracer.enabled:
+            self.tracer.append({"type": "drain_complete",
+                                "tenant": claimant, "nodes": n,
+                                "parent": step_span or None})
+        if n > 0 and t.on_grant is not None:
+            t.on_grant(n)
+        self.check()
 
     def release(self, name: str, n: int, *, reprovision: bool = True):
         """A tenant returns idle nodes; they flow back per the idle policy.
@@ -231,6 +335,8 @@ class TenantProvisionService:
         n = min(n, t.alloc)
         t.alloc -= n
         self.free += n
+        if self.inventory is not None and n > 0:
+            self.inventory.transfer(name, "free", n)
         if self.tracer.enabled and n > 0:
             self.tracer.append({"type": "release", "tenant": name,
                                 "nodes": n})
@@ -259,6 +365,8 @@ class TenantProvisionService:
             give = min(give, self.free)
             self.free -= give
             t.alloc += give
+            if self.inventory is not None:
+                self.inventory.transfer("free", t.name, give)
             if self.tracer.enabled:
                 self.tracer.append({"type": "idle_grant", "tenant": t.name,
                                     "nodes": give})
@@ -267,14 +375,19 @@ class TenantProvisionService:
         self.check()
 
     # ------------------------------------------------- failures (runtime)
-    def node_failed(self, owner: str):
+    def node_failed(self, owner: str, *, node: Optional[int] = None,
+                    cause: Optional[str] = None) -> Optional[int]:
         """A node died; capacity shrinks until repair.
 
         ``owner`` is a tenant name or ``"free"``. If the attributed pool is
         empty the failure is deterministically reattributed (free pool
         first, then tenants in registration order) so ``total`` can never
         desync from the pool sum; with no node anywhere a failure is
-        impossible and raises."""
+        impossible and raises. ``node`` names the failed node when an
+        inventory is attached (lowest-id of the pool otherwise). Returns
+        the failed node id (None without an inventory). The failure's
+        telemetry span parents the eventual ``node_repair`` — one causal
+        chain per outage."""
         pools = [("free", self.free)] + \
             [(t.name, t.alloc) for t in self.tenants.values()]
         by_name = dict(pools)
@@ -292,22 +405,80 @@ class TenantProvisionService:
         else:
             self.tenants[owner].alloc -= 1
         self.total -= 1
-        if self.tracer.enabled:
-            self.tracer.emit("node_fail", owner=owner,
-                             requested=requested_owner, total=self.total)
+        tr = self.tracer
+        span = tr.new_span() if tr.enabled else 0
+        if self.inventory is not None:
+            if node is None:
+                node = self.inventory.pick(owner)
+            self.inventory.fail(node, span=span, cause=cause)
+        elif tr.enabled:
+            # count-only path: repair delay is constant, so FIFO pairing
+            # of open failure spans with repairs is exact
+            self._fail_span_fifo.append(span)
+        if tr.enabled:
+            ev = {"type": "node_fail", "owner": owner, "span": span,
+                  "requested": requested_owner, "total": self.total}
+            if node is not None:
+                ev["node"] = node
+            if cause is not None:
+                ev["cause"] = cause
+            tr.append(ev)
         if self.policy.demand_driven:
             # a failure can drop a batch tenant below its declared demand
             # while nodes sit free; rebalance to restore the invariant
             self.provision_idle()
         self.check()
+        return node
 
-    def node_repaired(self):
+    def drain_node_failed(self, node: int, *,
+                          cause: Optional[str] = None) -> int:
+        """A node died mid-drain: it was serving neither tenant, so only
+        the drain pool and ``total`` shrink; the scheduled ``_drain_done``
+        will skip it and credit the claimant only the survivors."""
+        assert self.inventory is not None, \
+            "drain_node_failed requires an attached inventory"
+        assert self.draining > 0, self.draining
+        self.draining -= 1
+        self.total -= 1
+        tr = self.tracer
+        span = tr.new_span() if tr.enabled else 0
+        self.inventory.fail(node, span=span, cause=cause)
+        if tr.enabled:
+            ev = {"type": "node_fail", "owner": DRAIN_POOL, "span": span,
+                  "requested": DRAIN_POOL, "total": self.total,
+                  "node": node}
+            if cause is not None:
+                ev["cause"] = cause
+            tr.append(ev)
+        if self.policy.demand_driven:
+            self.provision_idle()
+        self.check()
+        return node
+
+    def node_repaired(self, *, node: Optional[int] = None
+                      ) -> Optional[int]:
+        """Capacity returns after repair. ``node`` names the repaired node
+        (lowest-id down node otherwise, with an inventory); the telemetry
+        event parents the node's original ``node_fail`` span. Returns the
+        repaired node id (None without an inventory)."""
         self.total += 1
         self.free += 1
+        parent = None
+        if self.inventory is not None:
+            nd = self.inventory.repair(node)
+            node = nd.id
+            parent = nd.fail_span or None
+        elif self._fail_span_fifo:
+            parent = self._fail_span_fifo.pop(0)
         if self.tracer.enabled:
-            self.tracer.emit("node_repair", total=self.total)
+            ev = {"type": "node_repair", "parent": parent,
+                  "total": self.total}
+            if node is not None:
+                ev["node"] = node
+            self.tracer.append(ev)
         self.provision_idle()   # re-provision before the invariant check:
         self.check()            # the repaired node may cover unmet demand
+        return node
 
 
 class MultiTenantProvisionService(TenantProvisionService):

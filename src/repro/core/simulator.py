@@ -29,6 +29,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import FaultSpec, make_injector
+from repro.core.nodes import DRAIN_POOL, NodeInventory
 from repro.core.provision import (ResourceProvisionService,
                                   TenantProvisionService)
 from repro.core.st_cms import STServer
@@ -244,11 +246,37 @@ class ConsolidationSim:
         self.rps = self.svc            # legacy attribute name
         self.policy_name = self.svc.policy.name
         self._demand_driven = self.svc.policy.demand_driven
+
+        # fault-injection wiring: a FaultSpec supersedes the legacy
+        # node_mtbf knob; it brings the identified-node inventory (and
+        # with it per-node lifecycle telemetry + failure domains)
+        spec_f: Optional[FaultSpec] = cfg.faults
+        self.inventory: Optional[NodeInventory] = None
+        self._injector = None
+        if spec_f is not None:
+            self.inventory = NodeInventory(cfg.total_nodes,
+                                           rack_size=spec_f.rack_size,
+                                           tracer=self.tracer)
+            self.svc.attach_inventory(self.inventory)
+            self._injector = make_injector(spec_f, cfg.seed,
+                                           sim_rng=self.rng)
+        # reclaim drain windows (SimConfig.drain_time_s or the profile's):
+        # the service schedules DRAIN_DONE through our event queue
+        drain_s = max(cfg.drain_time_s,
+                      spec_f.drain_time_s if spec_f is not None else 0.0)
+        if drain_s > 0:
+            self.svc.configure_drain(
+                drain_s,
+                lambda dt, fn: self._push(self.now + dt,
+                                          EventKind.DRAIN_DONE, fn))
+
         if self.tracer.enabled:
             self.tracer.meta.setdefault("policy", self.policy_name)
             self.tracer.meta.setdefault("total_nodes", cfg.total_nodes)
             self.tracer.meta.setdefault("horizon", horizon)
             self.tracer.meta.setdefault("seed", cfg.seed)
+            if spec_f is not None:
+                self.tracer.meta.setdefault("fault_profile", spec_f.profile)
         # open SLO-shortfall episodes: tenant -> (violation span, start ts)
         self._episodes: Dict[str, Tuple[int, float]] = {}
         self._next_sample = 0.0
@@ -275,7 +303,10 @@ class ConsolidationSim:
                     release=(lambda n, name=spec.name:
                              self.svc.release(name, n)),
                     slo=spec.slo)
-                on_grant = None
+                # deferred drain-window deliveries land via on_grant
+                # (plain claims credit synchronously through the claim()
+                # return value, so this only fires when drains are active)
+                on_grant = (lambda n, s=rt.server: s.grant(n, self.now))
                 on_force = (lambda n, s=rt.server:
                             s.force_release(n, self.now))
             if spec.name in self.svc.tenants:   # degenerate: pre-registered
@@ -298,6 +329,7 @@ class ConsolidationSim:
 
         self._batch = [rt for rt in self._runtimes if rt.is_batch]
         self._latency = [rt for rt in self._runtimes if not rt.is_batch]
+        self._rt_by_name = {rt.name: rt for rt in self._runtimes}
         # metric-sample fast path: the per-runtime attribute walk is
         # hoisted once (runtimes are fixed after construction), as is the
         # engine's market handle — _trace_sample runs inside the < 5 %
@@ -381,7 +413,9 @@ class ConsolidationSim:
         for rt in self._latency:
             for t, n in rt.demand:
                 self._push(t, EventKind.WS_DEMAND, (rt, n))
-        if self.cfg.node_mtbf > 0:
+        if self._injector is not None:
+            self._injector.start(self)
+        elif self.cfg.node_mtbf > 0:
             self._push(self.rng.expovariate(
                 self.cfg.total_nodes / self.cfg.node_mtbf),
                 EventKind.NODE_FAIL)
@@ -435,14 +469,21 @@ class ConsolidationSim:
                 if traced:
                     self._trace_episodes()
             elif ev.kind is EventKind.NODE_FAIL:
-                self._node_fail()
-                self._push(self.now + self.rng.expovariate(
-                    self.cfg.total_nodes / self.cfg.node_mtbf),
-                    EventKind.NODE_FAIL)
+                if self._injector is not None:
+                    self._injector.fire(self, ev.payload)
+                else:
+                    self._node_fail()
+                    self._push(self.now + self.rng.expovariate(
+                        self.cfg.total_nodes / self.cfg.node_mtbf),
+                        EventKind.NODE_FAIL)
                 if traced:
                     self._trace_episodes()
             elif ev.kind is EventKind.NODE_REPAIR:
-                self.svc.node_repaired()
+                self.svc.node_repaired(node=ev.payload)
+                if traced:
+                    self._trace_episodes()
+            elif ev.kind is EventKind.DRAIN_DONE:
+                ev.payload()   # service closure: deliver surviving nodes
                 if traced:
                     self._trace_episodes()
             self._update_demands()     # no-op under the paper policy
@@ -525,16 +566,68 @@ class ConsolidationSim:
         else:
             self._next_sample = math.inf
 
-    def _node_fail(self):
+    # ------------------------------------------------------ fault injection
+    # The injector-facing API: injectors (core/faults.py) own all fault
+    # RNG and scheduling decisions; the simulator owns the clock, the
+    # event queue and the count/CMS bookkeeping.
+
+    def schedule_fault(self, delay: float, payload=None):
+        self._push(self.now + delay, EventKind.NODE_FAIL, payload)
+
+    def schedule_repair(self, delay: float, node: Optional[int] = None):
+        self._push(self.now + delay, EventKind.NODE_REPAIR, node)
+
+    def emit_suppressed(self, reason: str, **fields):
+        """A fault event fired but could not take a node down (cluster at
+        its one-node minimum, flapper already dark, ...). Traced instead
+        of silently dropped so fail/repair events always pair up."""
+        tr = self.tracer
+        if tr.enabled:
+            tr.emit("fault_suppressed", reason=reason, **fields)
+
+    def apply_node_failure(self, node_id: int, cause: str,
+                           domain: Optional[int] = None):
+        """Take one identified node down, routing the loss through
+        whichever layer currently holds it (free pool, a tenant's CMS, or
+        the drain pool)."""
+        owner = self.inventory.owner_of(node_id)
+        if owner == DRAIN_POOL:
+            self.svc.drain_node_failed(node_id, cause=cause)
+            return
+        if owner == "free":
+            self.svc.node_failed("free", node=node_id, cause=cause)
+            return
+        rt = self._rt_by_name[owner]
+        # route the loss through the CMS's own eviction path so the
+        # server's alloc and the service's record cannot diverge (idle
+        # nodes absorb the loss before any job/replica is evicted)
+        rt.server.node_lost(self.now)
+        self.svc.node_failed(owner, node=node_id, cause=cause)
+        if not rt.is_batch:
+            # a latency department immediately re-requests to cover demand
+            rt.server.set_demand(rt.server.demand, self.now)
+
+    def fail_pool_proportional(self, rng: random.Random,
+                               repair_time_s: float,
+                               cause: Optional[str] = None):
+        """Legacy victim selection: one anonymous node fails, attributed
+        to pools proportionally to their size (free pool first, then
+        departments in registration order — the paper wiring's order is
+        st, ws). Draw order is the reproducibility contract: a suppressed
+        fault consumes NO draw from ``rng``."""
         total_alloc = self.svc.free + sum(rt.record.alloc
                                           for rt in self._runtimes)
         if total_alloc <= 1:
+            # the cluster is at its one-node minimum: taking the node
+            # would zero it out. Traced (never silently dropped) so
+            # fail/repair events stay paired and repairs can never
+            # over-repair past the configured total.
+            self.emit_suppressed("cluster_at_minimum",
+                                 total_alloc=total_alloc)
             return
-        r = self.rng.random() * total_alloc
-        # attribution intervals: free pool first, then departments in
-        # registration order (the paper wiring's order is st, ws)
+        r = rng.random() * total_alloc
         if r < self.svc.free:
-            self.svc.node_failed("free")
+            node = self.svc.node_failed("free", cause=cause)
         else:
             acc = self.svc.free
             victim = self._runtimes[-1]
@@ -543,16 +636,15 @@ class ConsolidationSim:
                 if r < acc:
                     victim = rt
                     break
-            # route the loss through the CMS's own eviction path so the
-            # server's alloc and the service's record cannot diverge (idle
-            # nodes absorb the loss before any job/replica is evicted)
             victim.server.node_lost(self.now)
-            self.svc.node_failed(victim.name)
+            node = self.svc.node_failed(victim.name, cause=cause)
             if not victim.is_batch:
-                # a latency department immediately re-requests to cover
-                # its demand
                 victim.server.set_demand(victim.server.demand, self.now)
-        self._push(self.now + self.cfg.node_repair_time, EventKind.NODE_REPAIR)
+        self.schedule_repair(repair_time_s, node)
+
+    def _node_fail(self):
+        """Legacy ``node_mtbf`` fault path (no FaultSpec configured)."""
+        self.fail_pool_proportional(self.rng, self.cfg.node_repair_time)
 
     # ------------------------------------------------------------- results
     def _tenant_result(self, rt: _TenantRuntime) -> TenantResult:

@@ -72,8 +72,11 @@ EVENT_SCHEMA: Dict[str, tuple] = {
     "auction_clear": ("price", "interval"),
     "debit": ("tenant", "nodes", "unit_price", "cost", "kind", "interval"),
     "release": ("tenant", "nodes"),
-    "node_fail": ("owner",),
-    "node_repair": (),
+    "node_fail": ("owner", "span"),
+    "node_repair": ("parent",),
+    "node_state": ("node", "from", "to"),
+    "fault_suppressed": ("reason",),
+    "drain_complete": ("tenant", "nodes", "parent"),
     "slo_violation": ("tenant", "demand", "alloc", "shortfall", "span"),
     "slo_recovery": ("tenant", "duration_s", "parent"),
     "autoscale": ("tenant", "prev", "demand", "source"),
@@ -232,6 +235,8 @@ def summarize_events(events: List[Dict]) -> Dict:
     violations: List[Dict] = []
     spend: Dict[str, Dict[str, float]] = {}
     clear_prices: List[float] = []
+    fail_by_cause: Dict[str, int] = {}
+    drained_nodes = 0
     for ev in events:
         t = ev.get("type")
         by_type[t] = by_type.get(t, 0) + 1
@@ -246,6 +251,11 @@ def summarize_events(events: List[Dict]) -> Dict:
             d[ev["kind"]] = d.get(ev["kind"], 0.0) + float(ev["cost"])
         elif t == "auction_clear":
             clear_prices.append(float(ev["price"]))
+        elif t == "node_fail":
+            cause = str(ev.get("cause", "mtbf"))
+            fail_by_cause[cause] = fail_by_cause.get(cause, 0) + 1
+        elif t == "drain_complete":
+            drained_nodes += int(ev.get("nodes", 0))
 
     # violation span -> the claim span it descends from (direct parent)
     viol_claim: Dict[int, Optional[int]] = {
@@ -301,6 +311,16 @@ def summarize_events(events: List[Dict]) -> Dict:
         "spend": {k: dict(v) for k, v in sorted(spend.items())},
         "auction": {"clearings": len(clear_prices),
                     "clearing_price": _dist(clear_prices)},
+        "faults": {
+            "failures": by_type.get("node_fail", 0),
+            "repairs": by_type.get("node_repair", 0),
+            "unrepaired": by_type.get("node_fail", 0)
+            - by_type.get("node_repair", 0),
+            "suppressed": by_type.get("fault_suppressed", 0),
+            "by_cause": dict(sorted(fail_by_cause.items())),
+            "drain_completes": by_type.get("drain_complete", 0),
+            "drained_nodes": drained_nodes,
+        },
     }
 
 
@@ -330,16 +350,20 @@ def validate_events(events: List[Dict]) -> List[str]:
 
 
 def check_causal_chains(events: List[Dict]) -> List[str]:
-    """Causal-integrity check for the reclaim chain (empty = intact):
-    every ``reclaim_plan`` parents to a ``claim`` span, every
-    ``reclaim_step`` to a ``reclaim_plan`` span, and every
-    ``slo_recovery`` to an ``slo_violation`` span."""
+    """Causal-integrity check for the reclaim and fault chains (empty =
+    intact): every ``reclaim_plan`` parents to a ``claim`` span, every
+    ``reclaim_step`` to a ``reclaim_plan`` span, every ``slo_recovery``
+    to an ``slo_violation`` span, every ``node_repair`` to the
+    ``node_fail`` that took the node down, and every ``drain_complete``
+    to the ``reclaim_step`` whose drain window it closes."""
     kind_by_span: Dict[int, str] = {}
     for ev in events:
         if "span" in ev:
             kind_by_span[ev["span"]] = ev["type"]
     want_parent = {"reclaim_plan": "claim", "reclaim_step": "reclaim_plan",
-                   "slo_recovery": "slo_violation"}
+                   "slo_recovery": "slo_violation",
+                   "node_repair": "node_fail",
+                   "drain_complete": "reclaim_step"}
     problems: List[str] = []
     for i, ev in enumerate(events):
         need = want_parent.get(ev.get("type"))

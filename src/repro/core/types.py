@@ -304,6 +304,7 @@ class EventKind(enum.Enum):
     NODE_FAIL = 5
     NODE_REPAIR = 6
     HEARTBEAT = 7
+    DRAIN_DONE = 8     # a reclaim step's drain window elapsed
 
 
 @dataclass(order=True)
@@ -327,9 +328,21 @@ class SimConfig:
     checkpoint_cost: float = 30.0
     scheduler: str = "first_fit"          # first_fit | fcfs | easy_backfill
     # fault injection (large-scale runnability): mean time between node
-    # failures across the whole cluster; 0 disables.
+    # failures across the whole cluster; 0 disables. The legacy anonymous
+    # path; `faults` below supersedes it when set.
     node_mtbf: float = 0.0
     node_repair_time: float = 3600.0
+    # declarative fault injection (core/faults.py FaultSpec): builds a
+    # NodeInventory (identified nodes, failure domains, per-node state
+    # machines) and the profile's injector. The degenerate
+    # FaultSpec("independent", seed=None) reproduces the node_mtbf path
+    # bit-for-bit. Typed as object to keep core/types dependency-free.
+    faults: Optional[object] = None
+    # forced-reclaim drain window in seconds: every reclaim step's nodes
+    # serve NEITHER tenant for this long before the claimant gets them
+    # (0 = instant handover, the paper's assumption). The active window is
+    # max(drain_time_s, faults.drain_time_s).
+    drain_time_s: float = 0.0
     # straggler mitigation: fraction of job launches that straggle, slowdown
     # factor, and whether speculative relaunch is enabled.
     straggler_frac: float = 0.0

@@ -24,6 +24,7 @@ import math
 from typing import Dict, List, Optional
 
 from repro.core.cms import proxy_headroom_s
+from repro.core.nodes import NodeInventory
 from repro.core.provision import (ResourceProvisionService,
                                   TenantProvisionService)
 from repro.core.telemetry import NULL_TRACER, Tracer
@@ -71,11 +72,19 @@ class MultiTenantOrchestrator:
     """
 
     def __init__(self, *, devices=None, policy="paper",
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None, rack_size: int = 16):
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.devs = DevicePool(devices, groups=())
         self.svc = TenantProvisionService(self.devs.total, policy=policy,
                                           tracer=self.tracer)
+        # identified-node layer: the orchestrator always carries the
+        # inventory so operators see node-level grants/losses (which node
+        # each department holds, its failure domain and lifecycle state),
+        # not bare counts
+        self.inventory = NodeInventory(self.devs.total,
+                                       rack_size=rack_size,
+                                       tracer=self.tracer)
+        self.svc.attach_inventory(self.inventory)
         self.batch: Dict[str, _BatchDept] = {}
         self.latency: Dict[str, _LatencyDept] = {}
         self.events: List[Dict] = []
@@ -273,6 +282,52 @@ class MultiTenantOrchestrator:
     def train_steps(self, name: str, n: int) -> Dict:
         self._tick_clock()
         return self.batch[name].trainer.train_steps(n)
+
+    # ----------------------------------------------------- node lifecycle
+    def nodes_of(self, name: str) -> List[int]:
+        """Sorted node ids a department (or ``"free"``) currently holds."""
+        return self.inventory.pool(name)
+
+    def node_states(self) -> Dict[str, int]:
+        """Cluster-wide lifecycle census, e.g. {"healthy": 14, ...}."""
+        return self.inventory.state_counts()
+
+    def fail_node(self, node_id: Optional[int] = None) -> int:
+        """Take one node down (operator drill / chaos hook). Default is
+        the lowest-id up node; the owning department's devices shrink
+        through its own resize path, exactly as a forced reclaim would.
+        Returns the failed node id."""
+        self._tick_clock()
+        inv = self.inventory
+        if node_id is None:
+            up = inv.up_ids()
+            assert up, "no up node to fail"
+            node_id = up[0]
+        owner = inv.owner_of(node_id)
+        # shrink the owner's devices BEFORE the count layer hears of the
+        # failure: node_failed may immediately re-provision (demand-driven
+        # policies), and grants must find the device already free
+        if owner in self.latency:
+            dept = self.latency[owner]
+            self.devs.reclaim(owner, 1)
+            dept.pool.scale_to(self.devs.groups[owner])
+        elif owner in self.batch:
+            dept = self.batch[owner]
+            self.devs.reclaim(owner, 1)
+            if dept.started and self.devs.groups[owner]:
+                dept.trainer.resize(self.devs.groups[owner])
+        self.svc.node_failed(owner, node=node_id)
+        self.events.append({"kind": "node_fail", "node": node_id,
+                            "dept": owner})
+        return node_id
+
+    def repair_node(self, node_id: Optional[int] = None) -> int:
+        """Bring a failed node back (lowest-id down node by default); it
+        re-enters the free pool and flows out per the idle policy."""
+        self._tick_clock()
+        node_id = self.svc.node_repaired(node=node_id)
+        self.events.append({"kind": "node_repair", "node": node_id})
+        return node_id
 
 
 class PhoenixOrchestrator:

@@ -7,11 +7,14 @@
     python -m repro.trace perfetto CELL.trace.jsonl --out cell.perfetto.json
 
 ``summarize`` prints per-tenant reclaim-latency and SLO-violation-duration
-distributions plus spend attribution; ``diff`` compares two summaries
+distributions, spend attribution and the fault ledger (failures/repairs
+by cause, suppressions, drain deliveries); ``diff`` compares two summaries
 (e.g. the same cell under two engines); ``causality`` walks every forced
 claim's ``claim -> reclaim plan -> drains -> SLO recovery`` chain;
 ``validate`` schema-checks the trace and verifies causal-chain integrity
-(non-zero exit on any problem — CI gates on it); ``perfetto`` exports
+— including every ``node_fail -> node_repair`` pairing and every
+``reclaim_step -> drain_complete`` delivery — (non-zero exit on any
+problem — CI gates on it); ``perfetto`` exports
 Chrome trace-event JSON loadable in https://ui.perfetto.dev or
 chrome://tracing. All subcommands take ``--json`` for machine output.
 """
@@ -55,6 +58,16 @@ def _print_summary(s: dict) -> None:
     if s["auction"]["clearings"]:
         print(f"auction clearings: {s['auction']['clearings']} "
               f"price {_fmt_dist(s['auction']['clearing_price'])}")
+    f = s.get("faults", {})
+    if f.get("failures") or f.get("suppressed"):
+        by_cause = " ".join(f"{c}={n}" for c, n in
+                            sorted(f.get("by_cause", {}).items()))
+        print(f"faults: failures={f['failures']} repairs={f['repairs']} "
+              f"unrepaired={f['unrepaired']} suppressed={f['suppressed']} "
+              f"({by_cause})")
+        if f.get("drain_completes"):
+            print(f"  drains: {f['drain_completes']} window(s), "
+                  f"{f['drained_nodes']} node(s) delivered after drain")
 
 
 def _cmd_summarize(args) -> int:

@@ -39,6 +39,14 @@ the per-impl split lands in the artifact's ``throughput.queue_impls``).
 ``--queue-impl exact`` keeps the inline per-tenant float64 numpy sweep.
 Batched metrics are composition-independent — bucket shapes are pure
 per-cell functions — so chunking/sharding never changes a row.
+
+Fault profiles (v7): ``--fault-profile`` / the ``fault_profile`` cell
+axis injects node failures from ``core.faults.FAULT_PROFILES`` (``none``
+keeps cells fault-free; ``independent`` | ``rack_corr`` | ``flapping``).
+The fault stream is seeded independently of the policy/budget axes, so
+robustness frontiers — completions and WS p99 vs fault severity, per
+policy engine — are apples-to-apples across every other axis. The
+``faults_tiny`` grid is mix_tiny x every profile.
 """
 from __future__ import annotations
 
@@ -54,6 +62,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import FAULT_PROFILES, get_fault_spec
 from repro.core.policies import POLICIES
 from repro.core.simulator import ConsolidationSim
 from repro.core.telemetry import Tracer, summarize_events
@@ -66,7 +75,7 @@ from repro.workloads.queueing import (QueueJob, SIM_COUNTERS, counters_delta,
                                       simulate_queue_batch,
                                       snapshot_counters)
 
-SCHEMA = "phoenix-campaign-v6"
+SCHEMA = "phoenix-campaign-v7"
 
 # cells dispatched per batched queue flush: every WS tenant queue from a
 # chunk of sims rides one shape-bucketed device program (bigger chunks
@@ -102,6 +111,9 @@ class ScenarioCell:
     # the shape-bucketed jit(vmap(scan)) device cores (float32, golden
     # tolerance); "exact" keeps the inline per-tenant float64 numpy sweep.
     queue_impl: str = "batched"
+    # fault-injection profile (v7): key into core.faults.FAULT_PROFILES;
+    # "none" keeps the cell fault-free (the pre-v7 behaviour)
+    fault_profile: str = "none"
     seed: int = 0
 
     def cell_id(self) -> str:
@@ -117,7 +129,8 @@ class ScenarioCell:
         extra = [(tag, getattr(self, name))
                  for tag, name in (("r", "rate_rps"), ("h", "horizon_s"),
                                    ("j", "n_jobs"), ("x", "st_max_nodes"),
-                                   ("b", "budget"), ("q", "queue_impl"))
+                                   ("b", "budget"), ("q", "queue_impl"),
+                                   ("f", "fault_profile"))
                  if getattr(self, name) != defaults[name]]
         if extra:
             base += "".join(f"-{tag}{v:g}" if isinstance(v, float)
@@ -147,7 +160,7 @@ REDUCE_KEYS = tuple(k for k in METRIC_KEYS
                     if k not in ("queue_sim_s", "wall_s"))
 # axes a reduction marginalizes over
 AXIS_KEYS = ("preempt", "scheduler", "arrival", "total_nodes",
-             "slo_target_s", "policy", "mix", "budget")
+             "slo_target_s", "policy", "mix", "budget", "fault_profile")
 
 
 def _policy_axis(policies: Optional[Sequence[str]],
@@ -165,13 +178,17 @@ def _policy_axis(policies: Optional[Sequence[str]],
 def make_grid(name: str, seed: int = 0,
               policies: Optional[Sequence[str]] = None,
               budget: float = 0.0,
-              queue_impl: Optional[str] = None) -> List[ScenarioCell]:
+              queue_impl: Optional[str] = None,
+              fault_profile: Optional[str] = None) -> List[ScenarioCell]:
     """Named grids. `tiny` is the CI smoke grid (8 cells, < 60 s serial);
-    `mix_tiny` smokes the policy x department-mix matrix. ``policies``
-    overrides each grid's policy axis (CLI ``--policy a,b,c``);
-    ``budget`` sets every cell's per-department market budget (CLI
-    ``--budget``, 0 = unlimited); ``queue_impl`` overrides every cell's
-    WS queue backend (CLI ``--queue-impl batched|exact``)."""
+    `mix_tiny` smokes the policy x department-mix matrix; `faults_tiny`
+    crosses mix_tiny with every fault profile. ``policies`` overrides
+    each grid's policy axis (CLI ``--policy a,b,c``); ``budget`` sets
+    every cell's per-department market budget (CLI ``--budget``, 0 =
+    unlimited); ``queue_impl`` overrides every cell's WS queue backend
+    (CLI ``--queue-impl batched|exact``); ``fault_profile`` overrides
+    every cell's fault-injection profile (CLI ``--fault-profile``, a key
+    of ``core.faults.FAULT_PROFILES``)."""
     cells = _make_grid_cells(name, seed, policies)
     if budget:
         cells = [dataclasses.replace(c, budget=budget) for c in cells]
@@ -180,6 +197,10 @@ def make_grid(name: str, seed: int = 0,
             raise ValueError(f"unknown queue_impl {queue_impl!r}; "
                              "have batched/exact")
         cells = [dataclasses.replace(c, queue_impl=queue_impl)
+                 for c in cells]
+    if fault_profile is not None:
+        get_fault_spec(fault_profile)       # raises on unknown profile
+        cells = [dataclasses.replace(c, fault_profile=fault_profile)
                  for c in cells]
     return cells
 
@@ -212,6 +233,15 @@ def _make_grid_cells(name: str, seed: int,
                              slo_target_s=30.0, policy=pol, mix="2hpc2ws",
                              seed=seed)
                 for pol in _policy_axis(policies, sorted(POLICIES))]
+    if name == "faults_tiny":
+        # robustness frontier: mix_tiny's policy axis x every fault
+        # profile (the "none" column is the fault-free baseline)
+        return [ScenarioCell(preempt="kill", scheduler="first_fit",
+                             arrival="poisson", total_nodes=96,
+                             slo_target_s=30.0, policy=pol, mix="2hpc2ws",
+                             fault_profile=fp, seed=seed)
+                for pol in _policy_axis(policies, sorted(POLICIES))
+                for fp in sorted(FAULT_PROFILES)]
     if name == "mix":
         return [ScenarioCell(preempt=p, scheduler="first_fit",
                              arrival="flash_crowd", total_nodes=n,
@@ -233,7 +263,7 @@ def _make_grid_cells(name: str, seed: int,
                 for pol in _policy_axis(policies, sorted(POLICIES))
                 for m in sorted(MIXES)]
     raise ValueError(f"unknown grid {name!r}; "
-                     f"have tiny/small/mix_tiny/mix/full")
+                     f"have tiny/small/mix_tiny/faults_tiny/mix/full")
 
 
 def shard_cells(cells: Sequence[ScenarioCell],
@@ -326,9 +356,12 @@ def _cell_start(cell: ScenarioCell,
         tracer = Tracer(meta={"cell_id": cell.cell_id(),
                               "cell_key": cell.cell_key(),
                               "schema": SCHEMA})
+    if tracer is not None and cell.fault_profile != "none":
+        tracer.meta["fault_profile"] = cell.fault_profile
     cfg = SimConfig(total_nodes=cell.total_nodes,
                     preempt_mode=cell.preempt,
-                    scheduler=cell.scheduler, seed=cell.seed)
+                    scheduler=cell.scheduler, seed=cell.seed,
+                    faults=get_fault_spec(cell.fault_profile))
     if cell.mix == "paper2" and cell.policy == "paper":
         # the degenerate 2-tenant path (bit-identical to the seed pipeline)
         jobs = synthetic_sdsc_blue(seed=cell.seed, n_jobs=cell.n_jobs,
@@ -578,10 +611,12 @@ def reduce_metrics(results: List[Dict]) -> Dict:
 
     red = {"overall": stats(np.ones(len(results), dtype=bool))}
     for axis in AXIS_KEYS:
-        levels = sorted({r[axis] for r in results}, key=str)
+        # .get(): hand-built rows may predate a newly added axis column —
+        # a single (absent) level is skipped like any non-varying axis
+        levels = sorted({r.get(axis) for r in results}, key=str)
         if len(levels) < 2:
             continue
-        vals = np.array([str(r[axis]) for r in results])
+        vals = np.array([str(r.get(axis)) for r in results])
         red[f"by_{axis}"] = {str(lv): stats(vals == str(lv))
                              for lv in levels}
     return red
@@ -770,7 +805,8 @@ def _print_summary(art: Dict, out: str) -> None:
 def _main_run(argv) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--grid", default="tiny",
-                    choices=["tiny", "small", "mix_tiny", "mix", "full"])
+                    choices=["tiny", "small", "mix_tiny", "faults_tiny",
+                             "mix", "full"])
     ap.add_argument("--policy", default=None, metavar="P1,P2,...",
                     help="override the grid's policy axis with this "
                          f"comma-separated subset of {sorted(POLICIES)}")
@@ -783,6 +819,11 @@ def _main_run(argv) -> int:
                          "flushes each chunk's queues through the jit(vmap"
                          "(scan)) device cores; 'exact' keeps the inline "
                          "float64 numpy sweep per tenant")
+    ap.add_argument("--fault-profile", default=None,
+                    choices=sorted(FAULT_PROFILES),
+                    help="override every cell's fault-injection profile "
+                         "(core.faults.FAULT_PROFILES); 'none' = fault-"
+                         "free (default for all grids except faults_tiny)")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="campaign.json")
@@ -812,7 +853,8 @@ def _main_run(argv) -> int:
 
     policies = args.policy.split(",") if args.policy else None
     cells = make_grid(args.grid, seed=args.seed, policies=policies,
-                      budget=args.budget, queue_impl=args.queue_impl)
+                      budget=args.budget, queue_impl=args.queue_impl,
+                      fault_profile=args.fault_profile)
     art = run_campaign(cells, workers=args.workers, out_path=args.out,
                        grid_name=args.grid, spool_path=spool,
                        resume=args.resume, shard=args.shard,
@@ -830,7 +872,8 @@ def _main_merge(argv) -> int:
     ap.add_argument("spools", nargs="+", help="JSONL spool files")
     ap.add_argument("--out", default="campaign.json")
     ap.add_argument("--grid", default=None,
-                    choices=["tiny", "small", "mix_tiny", "mix", "full"],
+                    choices=["tiny", "small", "mix_tiny", "faults_tiny",
+                             "mix", "full"],
                     help="order/verify rows against this named grid")
     ap.add_argument("--policy", default=None, metavar="P1,P2,...",
                     help="the --policy subset the shards ran with")
@@ -839,6 +882,9 @@ def _main_merge(argv) -> int:
     ap.add_argument("--queue-impl", default=None,
                     choices=["batched", "exact"],
                     help="the --queue-impl the shards ran with")
+    ap.add_argument("--fault-profile", default=None,
+                    choices=sorted(FAULT_PROFILES),
+                    help="the --fault-profile the shards ran with")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--allow-partial", action="store_true",
                     help="merge even if grid cells are missing")
@@ -847,7 +893,8 @@ def _main_merge(argv) -> int:
     policies = args.policy.split(",") if args.policy else None
     grid_cells = make_grid(args.grid, seed=args.seed, policies=policies,
                            budget=args.budget,
-                           queue_impl=args.queue_impl) \
+                           queue_impl=args.queue_impl,
+                           fault_profile=args.fault_profile) \
         if args.grid else None
     art, missing = merge_spools(args.spools, grid_cells=grid_cells,
                                 grid_name=args.grid or "merged")

@@ -133,12 +133,12 @@ def test_resume_runs_only_missing_cells(tmp_path):
     assert art2["reductions"] == art["reductions"]
 
 
-def test_run_campaign_writes_v6_artifact(tmp_path):
+def test_run_campaign_writes_v7_artifact(tmp_path):
     out = tmp_path / "c.json"
     art = run_campaign(FAST_CELLS[:2], workers=1, out_path=str(out),
                        grid_name="unit")
     disk = json.loads(out.read_text())
-    assert disk["schema"] == "phoenix-campaign-v6"
+    assert disk["schema"] == "phoenix-campaign-v7"
     assert "throughput" in disk and disk["throughput"]["executed"] == 2
     assert disk["cells"][0]["queue_sim"]["requests"] > 0
     assert disk["cells"][0]["metrics"]["queue_sim_s"] >= 0.0
@@ -179,7 +179,7 @@ def test_merge_refuses_stale_schema_spools(tmp_path):
     assert merged["n_cells"] == 0
     # while a current-schema spool folds cleanly
     assert old_key(FAST_CELLS[0]) != FAST_CELLS[0].cell_key()
-    assert SCHEMA == "phoenix-campaign-v6"
+    assert SCHEMA == "phoenix-campaign-v7"
 
 
 def test_market_policy_state_survives_shard_merge_bit_for_bit(tmp_path):

@@ -1,0 +1,111 @@
+"""Node-lifecycle layer: state machine legality, deterministic pool
+moves, failure domains, and count<->identity lockstep (core/nodes.py)."""
+import pytest
+
+from repro.core.nodes import (DRAIN_POOL, LEGAL_TRANSITIONS, NodeInventory,
+                              NodeState)
+from repro.core.provision import TenantProvisionService
+from repro.core.policies import Tenant
+from repro.core.telemetry import Tracer
+
+
+def test_domains_partition_by_rack_size():
+    inv = NodeInventory(40, rack_size=16)
+    assert inv.domains() == [0, 1, 2]
+    assert inv.nodes[0].domain == 0
+    assert inv.nodes[15].domain == 0
+    assert inv.nodes[16].domain == 1
+    assert inv.domain_up_ids(2) == list(range(32, 40))
+
+
+def test_transfer_moves_lowest_ids_deterministically():
+    inv = NodeInventory(10)
+    ids = inv.transfer("free", "a", 3)
+    assert ids == [0, 1, 2]
+    assert inv.pool("a") == [0, 1, 2]
+    assert inv.pool("free") == [3, 4, 5, 6, 7, 8, 9]
+    # moving back merges and the next take again picks lowest ids
+    inv.transfer("a", "free", 2)
+    assert inv.pool("free") == [0, 1, 3, 4, 5, 6, 7, 8, 9]
+    assert inv.transfer("free", "b", 2) == [0, 1]
+
+
+def test_illegal_transition_raises():
+    inv = NodeInventory(4)
+    node = inv.nodes[0]
+    # healthy -> repairing is not in the lifecycle contract
+    with pytest.raises(ValueError, match="illegal node transition"):
+        inv._set_state(node, NodeState.REPAIRING)
+    assert (NodeState.HEALTHY, NodeState.REPAIRING) not in LEGAL_TRANSITIONS
+    assert node.state is NodeState.HEALTHY      # unchanged on failure
+
+
+def test_fail_and_repair_cycle_states_and_pools():
+    inv = NodeInventory(6)
+    inv.transfer("free", "t", 3)
+    nd = inv.fail(1, span=7)
+    assert nd.state is NodeState.REPAIRING      # FAILED -> REPAIRING
+    assert nd.fail_span == 7
+    assert inv.pool("t") == [0, 2]
+    assert inv.up_ids() == [0, 2, 3, 4, 5]
+    back = inv.repair()                          # lowest-id down node
+    assert back.id == 1 and back.state is NodeState.HEALTHY
+    assert 1 in inv.pools["free"]
+
+
+def test_flappers_repair_back_to_flapping():
+    inv = NodeInventory(8)
+    inv.designate_flappers([2, 5])
+    assert inv.state_of(2) is NodeState.FLAPPING
+    inv.fail(2, span=1)
+    nd = inv.repair(2)
+    assert nd.state is NodeState.FLAPPING        # never "healthy" again
+    # flappers are still up (selectable as fault victims)
+    assert 2 in inv.up_ids()
+
+
+def test_node_state_events_emitted_for_every_transition():
+    tr = Tracer()
+    inv = NodeInventory(4, tracer=tr)
+    inv.transfer("free", "t", 2, state=NodeState.DRAINING, parent=9)
+    inv.move_nodes([0, 1], "ws", state=NodeState.HEALTHY, parent=9)
+    inv.fail(0, span=3)
+    inv.repair(0)
+    evs = [e for e in tr.events if e["type"] == "node_state"]
+    # 2 drain-starts + 2 drain-completes + fail + repairing + repaired
+    assert len(evs) == 7
+    assert [(e["from"], e["to"]) for e in evs if e["node"] == 0] == [
+        ("healthy", "draining"), ("draining", "healthy"),
+        ("healthy", "failed"), ("failed", "repairing"),
+        ("repairing", "healthy")]
+    # transitions parent to their causal context
+    assert evs[0]["parent"] == 9
+    assert [e["parent"] for e in evs if e["to"] == "failed"] == [3]
+
+
+def test_audit_locksteps_with_service_counts():
+    svc = TenantProvisionService(12, policy="paper")
+    inv = NodeInventory(12)
+    svc.attach_inventory(inv)
+    svc.register(Tenant("st", "batch", priority=1))
+    svc.register(Tenant("ws", "latency", priority=0))
+    svc.provision_idle()                   # paper: all idle -> st
+    inv.audit(svc)
+    svc.tenants["st"].on_force_release = lambda n: n
+    svc.claim("ws", 5)
+    inv.audit(svc)
+    svc.release("ws", 2, reprovision=False)
+    inv.audit(svc)
+    svc.node_failed("st")
+    inv.audit(svc)
+    svc.node_repaired()
+    inv.audit(svc)
+    assert inv.total - svc.total == 0
+
+
+def test_reserved_pool_names_rejected():
+    svc = TenantProvisionService(4)
+    with pytest.raises(AssertionError):
+        svc.register(Tenant(DRAIN_POOL, "batch", priority=1))
+    with pytest.raises(AssertionError):
+        svc.register(Tenant("free", "batch", priority=1))

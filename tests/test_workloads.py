@@ -258,5 +258,5 @@ def test_campaign_cell_and_reduction(tmp_path):
     assert red["overall"]["cells"] == 2
     import json
     disk = json.loads(out.read_text())
-    assert disk["schema"] == "phoenix-campaign-v6"
+    assert disk["schema"] == "phoenix-campaign-v7"
     assert disk["throughput"]["queue_requests_per_s"] > 0
