@@ -432,8 +432,10 @@ def causality_report(events: List[Dict],
 
 def diff_summaries(a: Dict, b: Dict) -> Dict:
     """Structural diff of two ``summarize_events`` outputs (analyzer
-    ``diff``): event-count deltas per type, reclaim-latency and
-    SLO-duration shifts per tenant, spend deltas."""
+    ``diff`` and the ``regress`` gate): event-count deltas per type,
+    reclaim-latency and SLO-duration shifts per tenant, spend deltas,
+    never-recovered claim counts, and the fault ledger
+    (failures/repairs/suppressions/drain deliveries)."""
     def num_delta(x, y):
         return {"a": x, "b": y, "delta": (y or 0) - (x or 0)}
 
@@ -463,6 +465,21 @@ def diff_summaries(a: Dict, b: Dict) -> Dict:
                             sb.get(name, {}).get(k, 0.0))
                for k in ("idle", "reclaim")}
         for name in sorted(set(sa) | set(sb))}
+    ua = a.get("reclaim_latency_s", {}).get("unrecovered", {})
+    ub = b.get("reclaim_latency_s", {}).get("unrecovered", {})
+    out["unrecovered"] = {
+        name: num_delta(ua.get(name, 0), ub.get(name, 0))
+        for name in sorted(set(ua) | set(ub))}
+    fa, fb = a.get("faults", {}), b.get("faults", {})
+    out["faults"] = {
+        k: num_delta(fa.get(k, 0), fb.get(k, 0))
+        for k in ("failures", "repairs", "unrepaired", "suppressed",
+                  "drain_completes", "drained_nodes")}
+    causes = sorted(set(fa.get("by_cause", {})) | set(fb.get("by_cause", {})))
+    out["faults"]["by_cause"] = {
+        c: num_delta(fa.get("by_cause", {}).get(c, 0),
+                     fb.get("by_cause", {}).get(c, 0))
+        for c in causes}
     return out
 
 

@@ -4,26 +4,43 @@
     python -m repro.trace diff A.trace.jsonl B.trace.jsonl
     python -m repro.trace causality CELL.trace.jsonl --tenant ws-0
     python -m repro.trace validate CELL.trace.jsonl
+    python -m repro.trace replay CELL.trace.jsonl
+    python -m repro.trace bisect A.trace.jsonl B.trace.jsonl
+    python -m repro.trace regress goldens/mix_tiny_traces NEW_TRACE_DIR
     python -m repro.trace perfetto CELL.trace.jsonl --out cell.perfetto.json
 
 ``summarize`` prints per-tenant reclaim-latency and SLO-violation-duration
 distributions, spend attribution and the fault ledger (failures/repairs
 by cause, suppressions, drain deliveries); ``diff`` compares two summaries
-(e.g. the same cell under two engines); ``causality`` walks every forced
-claim's ``claim -> reclaim plan -> drains -> SLO recovery`` chain;
+(e.g. the same cell under two engines) including fault-ledger and
+never-recovered deltas; ``causality`` walks every forced claim's
+``claim -> reclaim plan -> drains -> SLO recovery`` chain;
 ``validate`` schema-checks the trace and verifies causal-chain integrity
 — including every ``node_fail -> node_repair`` pairing and every
 ``reclaim_step -> drain_complete`` delivery — (non-zero exit on any
-problem — CI gates on it); ``perfetto`` exports
-Chrome trace-event JSON loadable in https://ui.perfetto.dev or
-chrome://tracing. All subcommands take ``--json`` for machine output.
+problem — CI gates on it); ``replay`` reconstructs the run's decision
+sequence from the trace and re-applies it against fresh count books,
+verifying every ``metrics`` checkpoint (core/replay.py) — non-zero exit
+proves the trace is NOT a complete causal record; ``bisect`` walks two
+traces of the same scenario under different engines and localizes the
+first divergent decision (sim-time, tenant, planned vs taken step);
+``regress`` pairs every golden cell trace with its counterpart in a new
+trace dir and gates on drift thresholds (reclaim p99, SLO episode
+count/duration, spend, fault ledger, never-recovered claims — all
+default 0: same-seed traces are deterministic), non-zero exit on breach
+— the CI regression gate; ``perfetto`` exports Chrome trace-event JSON
+loadable in https://ui.perfetto.dev or chrome://tracing. All subcommands
+take ``--json`` for machine output.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import os
 import sys
 
+from repro.core.replay import bisect_traces, replay_events
 from repro.core.telemetry import (causality_report, check_causal_chains,
                                   diff_summaries, load_events,
                                   summarize_events, to_perfetto,
@@ -93,9 +110,9 @@ def _cmd_diff(args) -> int:
         if v["delta"]:
             print(f"  {t:<16} {v['a']} -> {v['b']} ({v['delta']:+d})")
     rl = d["reclaim_latency_s"]
-    print("reclaim latency: " + "  ".join(
+    print(f"reclaim latency: n={rl['n']['a']}->{rl['n']['b']}  " + "  ".join(
         f"{k}={rl[k]['a']:.1f}->{rl[k]['b']:.1f}"
-        for k in ("n", "p50", "p99", "max")))
+        for k in ("p50", "p99", "max")))
     for name, v in d["slo_violations"].items():
         print(f"  slo {name}: count {v['count']['a']}->{v['count']['b']} "
               f"p99_dur {v['p99_duration_s']['a']:.1f}s->"
@@ -104,6 +121,19 @@ def _cmd_diff(args) -> int:
         print(f"  spend {name}: idle {v['idle']['a']:.1f}->"
               f"{v['idle']['b']:.1f} reclaim {v['reclaim']['a']:.1f}->"
               f"{v['reclaim']['b']:.1f}")
+    for name, v in d["unrecovered"].items():
+        if v["a"] or v["b"]:
+            print(f"  unrecovered {name}: {v['a']}->{v['b']} "
+                  f"({v['delta']:+d})")
+    f = d["faults"]
+    if any(f[k]["a"] or f[k]["b"] for k in f if k != "by_cause"):
+        print("faults: " + "  ".join(
+            f"{k}={f[k]['a']}->{f[k]['b']}"
+            for k in ("failures", "repairs", "unrepaired", "suppressed",
+                      "drain_completes", "drained_nodes")))
+        for c, v in f["by_cause"].items():
+            if v["delta"]:
+                print(f"  cause {c}: {v['a']}->{v['b']} ({v['delta']:+d})")
     return 0
 
 
@@ -155,6 +185,187 @@ def _cmd_validate(args) -> int:
     return 1 if problems else 0
 
 
+def _cmd_replay(args) -> int:
+    res = replay_events(load_events(args.trace))
+    if args.json:
+        json.dump({"events": res.events, "decisions": res.decisions,
+                   "checkpoints": res.checkpoints, "books": res.books(),
+                   "problems": res.problems}, sys.stdout, indent=1)
+        print()
+        return 0 if res.ok else 1
+    if res.problems:
+        print(f"REPLAY DIVERGED: {len(res.problems)} problem(s)")
+        for p in res.problems[:20]:
+            print(f"  {p}")
+        return 1
+    b = res.books()
+    print(f"ok: replayed {res.decisions} decision(s) from {res.events} "
+          f"event(s); {res.checkpoints} checkpoint(s) matched the live "
+          f"run's count books exactly")
+    print(f"final books: total={b['total']} free={b['free']} "
+          f"draining={b['draining']}")
+    for name, n in b["alloc"].items():
+        extra = ""
+        if b["spend"].get(name):
+            extra = f" spend={b['spend'][name]:.2f}"
+        print(f"  {name:<16} alloc={n}{extra}")
+    return 0
+
+
+def _cmd_bisect(args) -> int:
+    rep = bisect_traces(load_events(args.a), load_events(args.b))
+    if args.json:
+        json.dump(rep or {"identical": True}, sys.stdout, indent=1)
+        print()
+        return 0 if rep is None else 1
+    if rep is None:
+        print("decision streams are behaviorally identical")
+        return 0
+    print(f"first divergent decision: #{rep['decision_index']} "
+          f"({rep['common_decisions']} common decision(s) before it)")
+    for label in ("a", "b"):
+        s = rep[label]
+        if s["exhausted"]:
+            print(f"  {label}: trace ends (no decision #"
+                  f"{rep['decision_index']})")
+        else:
+            print(f"  {label}: [t={s['ts']:.1f}s] {s['type']} "
+                  f"tenant={s['tenant']}")
+            print(f"     {json.dumps(s['event'], sort_keys=True)}")
+    for label in ("plan_a", "plan_b"):
+        plan = rep.get(label)
+        if plan:
+            steps = " ".join(f"{st['victim']}:{st['take']}"
+                             for st in plan["steps"])
+            print(f"  {label}: [t={plan['ts']:.1f}s] "
+                  f"engine={plan['engine']} planned [{steps}]")
+    if rep["context"]:
+        print("  last common decisions:")
+        for ev in rep["context"]:
+            print(f"    [t={ev.get('ts', 0.0):.1f}s] {ev.get('type')} "
+                  f"tenant={ev.get('tenant')}")
+    return 1
+
+
+# --------------------------------------------------------- regress gate
+
+
+@dataclasses.dataclass(frozen=True)
+class RegressThresholds:
+    """Max tolerated |delta| per drift axis. All default to zero: a
+    same-seed rerun emits a byte-identical trace (no wall clock in the
+    control plane; queue metrics are post-hoc jax evaluations that never
+    feed back into consolidation), so ANY drift is a behavior change."""
+    reclaim_p99_s: float = 0.0
+    reclaim_n: int = 0
+    slo_count: int = 0
+    slo_p99_duration_s: float = 0.0
+    spend: float = 0.0
+    faults: int = 0
+    unrecovered: int = 0
+
+
+def check_regression(diff: dict, thr: RegressThresholds) -> list:
+    """Breaches in a ``diff_summaries`` output under ``thr`` (empty list
+    == within tolerance)."""
+    breaches = []
+
+    def gate(axis, delta, limit):
+        if abs(delta) > limit:
+            breaches.append(f"{axis}: |{delta:+g}| > {limit:g}")
+
+    rl = diff["reclaim_latency_s"]
+    gate("reclaim_latency_s.n", rl["n"]["delta"], thr.reclaim_n)
+    gate("reclaim_latency_s.p99", rl["p99"]["delta"], thr.reclaim_p99_s)
+    for name, v in diff["slo_violations"].items():
+        gate(f"slo_violations[{name}].count", v["count"]["delta"],
+             thr.slo_count)
+        gate(f"slo_violations[{name}].p99_duration_s",
+             v["p99_duration_s"]["delta"], thr.slo_p99_duration_s)
+    for name, v in diff["spend"].items():
+        for kind in ("idle", "reclaim"):
+            gate(f"spend[{name}].{kind}", v[kind]["delta"], thr.spend)
+    for name, v in diff["unrecovered"].items():
+        gate(f"unrecovered[{name}]", v["delta"], thr.unrecovered)
+    for k, v in diff["faults"].items():
+        if k == "by_cause":
+            for c, cv in v.items():
+                gate(f"faults.by_cause[{c}]", cv["delta"], thr.faults)
+        else:
+            gate(f"faults.{k}", v["delta"], thr.faults)
+    return breaches
+
+
+def _trace_cells(trace_dir: str) -> dict:
+    """Map cell identity -> trace path for every ``*.trace.jsonl`` in a
+    dir. Identity is the header's ``cell_id`` (human-readable, stable
+    across the cell_key hash-schema) with the filename stem as
+    fallback."""
+    cells = {}
+    for fn in sorted(os.listdir(trace_dir)):
+        if not fn.endswith(".trace.jsonl"):
+            continue
+        path = os.path.join(trace_dir, fn)
+        ident = fn[:-len(".trace.jsonl")]
+        with open(path) as f:
+            first = f.readline()
+        if first:
+            header = json.loads(first)
+            ident = header.get("cell_id", ident)
+        cells[ident] = path
+    return cells
+
+
+def _cmd_regress(args) -> int:
+    thr = RegressThresholds(
+        reclaim_p99_s=args.reclaim_p99_s, reclaim_n=args.reclaim_n,
+        slo_count=args.slo_count,
+        slo_p99_duration_s=args.slo_p99_duration_s, spend=args.spend,
+        faults=args.faults, unrecovered=args.unrecovered)
+    golden = _trace_cells(args.golden_dir)
+    fresh = _trace_cells(args.new_dir)
+    if not golden:
+        print(f"no *.trace.jsonl files in golden dir {args.golden_dir}",
+              file=sys.stderr)
+        return 2
+    report = {"cells": {}, "missing": [], "extra": [], "breaches": 0}
+    for ident in sorted(set(golden) - set(fresh)):
+        report["missing"].append(ident)
+    for ident in sorted(set(fresh) - set(golden)):
+        report["extra"].append(ident)
+    for ident in sorted(set(golden) & set(fresh)):
+        d = diff_summaries(summarize_events(load_events(golden[ident])),
+                           summarize_events(load_events(fresh[ident])))
+        breaches = check_regression(d, thr)
+        report["cells"][ident] = {"breaches": breaches, "diff": d}
+        report["breaches"] += len(breaches)
+    failed = bool(report["missing"] or report["breaches"])
+    if args.json:
+        json.dump(report, sys.stdout, indent=1)
+        print()
+        return 1 if failed else 0
+    for ident in report["missing"]:
+        print(f"MISSING: golden cell '{ident}' has no counterpart in "
+              f"{args.new_dir}")
+    for ident in report["extra"]:
+        print(f"note: new cell '{ident}' has no golden baseline "
+              f"(not gated)")
+    for ident, cell in report["cells"].items():
+        if cell["breaches"]:
+            print(f"DRIFT {ident}:")
+            for br in cell["breaches"]:
+                print(f"  {br}")
+        else:
+            print(f"ok {ident}")
+    n = len(report["cells"])
+    if failed:
+        print(f"regress: FAIL — {report['breaches']} breach(es) across "
+              f"{n} paired cell(s), {len(report['missing'])} missing")
+        return 1
+    print(f"regress: pass — {n} cell(s) within thresholds")
+    return 0
+
+
 def _cmd_perfetto(args) -> int:
     doc = to_perfetto(load_events(args.trace))
     with open(args.out, "w") as f:
@@ -194,6 +405,45 @@ def main(argv=None) -> int:
     p.add_argument("trace")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=_cmd_validate)
+
+    p = sub.add_parser("replay", help="re-apply the decision sequence "
+                                      "against count books (non-zero "
+                                      "exit on divergence)")
+    p.add_argument("trace")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_replay)
+
+    p = sub.add_parser("bisect", help="first divergent decision between "
+                                      "two traces of the same scenario")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_bisect)
+
+    p = sub.add_parser("regress", help="gate a new trace dir against a "
+                                       "golden baseline (non-zero exit "
+                                       "on drift)")
+    p.add_argument("golden_dir")
+    p.add_argument("new_dir")
+    p.add_argument("--json", action="store_true")
+    t = RegressThresholds()
+    p.add_argument("--reclaim-p99-s", type=float, default=t.reclaim_p99_s,
+                   help="max |delta| in overall reclaim-latency p99 "
+                        "seconds (default %(default)s)")
+    p.add_argument("--reclaim-n", type=int, default=t.reclaim_n,
+                   help="max |delta| in reclaim count")
+    p.add_argument("--slo-count", type=int, default=t.slo_count,
+                   help="max |delta| in per-tenant SLO episode count")
+    p.add_argument("--slo-p99-duration-s", type=float,
+                   default=t.slo_p99_duration_s,
+                   help="max |delta| in SLO episode p99 duration seconds")
+    p.add_argument("--spend", type=float, default=t.spend,
+                   help="max |delta| in per-tenant spend attribution")
+    p.add_argument("--faults", type=int, default=t.faults,
+                   help="max |delta| in any fault-ledger counter")
+    p.add_argument("--unrecovered", type=int, default=t.unrecovered,
+                   help="max |delta| in never-recovered claim counts")
+    p.set_defaults(fn=_cmd_regress)
 
     p = sub.add_parser("perfetto", help="export Chrome trace-event JSON")
     p.add_argument("trace")

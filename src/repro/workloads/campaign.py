@@ -479,8 +479,11 @@ def _cell_finish(p: _PendingCell, metrics: Sequence, tags: Sequence[str],
     if p.tracer is not None:
         # optional keys only — absent with tracing off, excluded from
         # REDUCE_KEYS, so reductions and untraced artifacts are unchanged
+        # filename is cell_key — the collision-proof spool/resume/merge
+        # identity — matching the documented contract; the human-readable
+        # cell_id stays available in the tracer header meta
         trace_file = os.path.join(trace_dir,
-                                  f"{cell.cell_id()}.trace.jsonl")
+                                  f"{cell.cell_key()}.trace.jsonl")
         p.tracer.to_jsonl(trace_file)
         out["trace_file"] = trace_file
         out["trace_summary"] = summarize_events(
@@ -519,7 +522,9 @@ def run_cell(cell: ScenarioCell, trace_dir: Optional[str] = None) -> Dict:
 
     ``trace_dir`` (the runner's ``--trace``) enables control-plane
     telemetry for the cell: the full causal trace is spooled to
-    ``<trace_dir>/<cell_id>.trace.jsonl`` and a compact summary
+    ``<trace_dir>/<cell_key>.trace.jsonl`` (the collision-proof content
+    hash; the human-readable cell_id is in the trace header's meta) and
+    a compact summary
     (reclaim-latency p50/p99, SLO-violation durations, spend attribution)
     is folded into the row under ``trace_summary``. Tracing is a RUNNER
     flag, not a cell field: cell_key — the spool/resume/merge identity —
@@ -709,7 +714,11 @@ def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
     single-shot artifact's reductions exactly. ``trace_dir`` enables
     per-cell control-plane traces (see ``run_cell``); it changes neither
     cell keys nor any reduced column, so traced and untraced runs of the
-    same grid stay merge-compatible.
+    same grid stay merge-compatible. A traced ``--resume`` re-runs any
+    spooled cell whose ``<cell_key>.trace.jsonl`` is missing from
+    ``trace_dir`` — a cell spooled by an earlier UNTRACED run would
+    otherwise be skipped, leaving the trace set silently incomplete and
+    the artifact with a mix of rows with/without ``trace_summary``.
     """
     t0 = time.time()
     if trace_dir is not None:
@@ -720,6 +729,15 @@ def run_campaign(cells: Sequence[ScenarioCell], *, workers: int = 1,
     if resume and spool_path:
         spooled = spool_load(spool_path)
         done = {k: spooled[k] for k in keys if k in spooled}
+        if trace_dir is not None:
+            untraced = [k for k in done if not os.path.exists(
+                os.path.join(trace_dir, f"{k}.trace.jsonl"))]
+            for k in untraced:
+                del done[k]
+            if untraced:
+                print(f"resume: re-running {len(untraced)} spooled "
+                      f"cell(s) with no trace in {trace_dir}",
+                      file=sys.stderr)
     todo = [c for c, k in zip(cells, keys) if k not in done]
     new_rows = _run_cells_streaming(todo, workers, spool_path, trace_dir)
     by_key = dict(done)

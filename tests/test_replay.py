@@ -1,0 +1,195 @@
+"""Trace-driven replay + bisection tests (core/replay.py, repro.trace).
+
+The PR-10 contract:
+
+  * a trace is a COMPLETE causal record — re-applying its decision
+    sequence against fresh count books reproduces the live sim's free
+    pool, per-tenant allocs and market spend at every ``metrics``
+    checkpoint, for every registry engine and under fault injection
+    (drains, node failures, repairs);
+  * tampering with the record (a dropped decision, a forged grant) makes
+    replay diverge loudly;
+  * ``bisect_traces`` localizes the first *behavioral* divergence
+    between two traces of the same scenario under different engines,
+    and ignores cosmetic differences (span ids, engine labels).
+"""
+import json
+
+import pytest
+
+from repro.core.policies import POLICIES
+from repro.core.replay import (bisect_traces, decision_stream,
+                               normalize_decision, replay_events)
+from repro.core.telemetry import load_events
+from test_telemetry import paper_two_tenant_trace, request_level_trace
+
+ENGINES = sorted(POLICIES)
+
+
+def _events(tr):
+    return [tr.header()] + tr.events
+
+
+# ------------------------------------------------------------- replay
+
+def test_replay_pinned_paper_trace():
+    """The golden 2009 two-tenant trace replays to the exact final books
+    the live sim recorded: st=7, ws=3, free=0 on 10 nodes."""
+    res = replay_events(_events(paper_two_tenant_trace()))
+    assert res.ok, res.problems
+    assert res.checkpoints == 4
+    assert res.books() == {
+        "total": 10, "free": 0, "draining": 0,
+        "alloc": {"st": 7, "ws": 3},
+        "spend": {}, "demand": {"ws": 3},
+    }
+
+
+@pytest.mark.parametrize("policy", ENGINES)
+def test_replay_every_engine_request_level(policy):
+    """Every registry engine's decision stream is a complete causal
+    record: replay matches all live metrics checkpoints exactly."""
+    res = replay_events(_events(request_level_trace(policy=policy)))
+    assert res.ok, (policy, res.problems[:5])
+    assert res.decisions > 10
+    assert res.checkpoints > 5
+    assert sum(res.alloc.values()) + res.free + res.draining == res.total
+
+
+def test_replay_pinned_mix_tiny_cell(tmp_path):
+    """A pinned mix_tiny campaign cell (acceptance criterion): the
+    spooled trace replays with count books matching the live sim at
+    every checkpoint, and the final books conserve the fleet."""
+    from repro.workloads.campaign import ScenarioCell, run_cell
+    cell = ScenarioCell(preempt="kill", scheduler="first_fit",
+                        arrival="poisson", total_nodes=96,
+                        slo_target_s=30.0, horizon_s=7200.0,
+                        n_jobs=20, rate_rps=2.0, mix="2hpc2ws",
+                        policy="slo_headroom")
+    row = run_cell(cell, trace_dir=str(tmp_path))
+    res = replay_events(load_events(row["trace_file"]))
+    assert res.ok, res.problems[:5]
+    assert res.checkpoints >= 10      # periodic samples + closing sample
+    assert res.total <= 96            # unrepaired failures only shrink it
+
+
+def test_replay_under_fault_injection(tmp_path):
+    """Drain windows, node failures and repairs all round-trip through
+    the books (draining pool, owner attribution, total shrink/grow)."""
+    from repro.workloads.campaign import ScenarioCell, run_cell
+    cell = ScenarioCell(preempt="kill", scheduler="first_fit",
+                        arrival="poisson", total_nodes=48,
+                        slo_target_s=30.0, horizon_s=7200.0,
+                        n_jobs=15, rate_rps=1.0, mix="2hpc2ws",
+                        policy="paper", fault_profile="rack_corr")
+    row = run_cell(cell, trace_dir=str(tmp_path))
+    events = load_events(row["trace_file"])
+    assert any(e["type"] == "node_fail" for e in events), \
+        "fault profile produced no failures; test scenario too quiet"
+    res = replay_events(events)
+    assert res.ok, res.problems[:5]
+
+
+def test_replay_detects_dropped_decision():
+    """Deleting one decision from the record breaks checkpoint match —
+    the trace is no longer a complete causal record."""
+    events = _events(paper_two_tenant_trace())
+    tampered = [e for e in events if e["type"] != "release"]
+    assert len(tampered) < len(events)
+    res = replay_events(tampered)
+    assert not res.ok
+    assert any("free" in p or "alloc" in p for p in res.problems)
+
+
+def test_replay_detects_forged_grant():
+    events = [dict(e) for e in _events(paper_two_tenant_trace())]
+    grant = next(e for e in events if e["type"] == "idle_grant")
+    grant["nodes"] += 1
+    res = replay_events(events)
+    assert not res.ok
+
+
+def test_replay_flags_claim_arithmetic():
+    """A claim whose granted count disagrees with from_free + reclaim
+    steps is reported even when checkpoints still happen to pass."""
+    events = [dict(e) for e in _events(paper_two_tenant_trace())]
+    claim = next(e for e in events if e["type"] == "claim")
+    claim["granted"] += 1
+    res = replay_events(events)
+    assert any("claim arithmetic" in p for p in res.problems)
+
+
+# ------------------------------------------------------------- bisect
+
+def test_bisect_identical_traces_is_none():
+    tr = request_level_trace(policy="paper")
+    assert bisect_traces(_events(tr), _events(tr)) is None
+
+
+def test_bisect_ignores_cosmetic_span_ids():
+    """Renumbering spans (allocation-order artifacts) is not a
+    behavioral divergence."""
+    a = _events(paper_two_tenant_trace())
+    b = []
+    for e in a:
+        e = dict(e)
+        for k in ("span", "parent"):
+            if k in e:
+                e[k] = e[k] + 100
+        b.append(e)
+    assert bisect_traces(a, b) is None
+
+
+def test_bisect_localizes_engine_divergence():
+    """paper vs slo_headroom on the same scenario (acceptance
+    criterion): the report pins sim-time, tenants, both events, and the
+    planned victim lists when a reclaim is involved."""
+    a = _events(request_level_trace(policy="paper"))
+    b = _events(request_level_trace(policy="slo_headroom"))
+    rep = bisect_traces(a, b)
+    assert rep is not None, "engines produced identical decision streams"
+    assert rep["common_decisions"] == rep["decision_index"]
+    for side in ("a", "b"):
+        s = rep[side]
+        assert not s["exhausted"]
+        assert s["ts"] is not None
+        assert s["type"] in {e["type"] for e in (a if side == "a" else b)}
+    # the divergence is real: the normalized events differ
+    assert normalize_decision(rep["a"]["event"]) \
+        != normalize_decision(rep["b"]["event"])
+    # and everything before it matches
+    sa, sb = decision_stream(a), decision_stream(b)
+    k = rep["decision_index"]
+    assert [normalize_decision(e) for _, e in sa[:k]] \
+        == [normalize_decision(e) for _, e in sb[:k]]
+
+
+def test_bisect_prefix_trace_reports_exhaustion():
+    events = _events(paper_two_tenant_trace())
+    stream = decision_stream(events)
+    cut_idx = stream[len(stream) // 2][0]       # truncate mid-stream
+    rep = bisect_traces(events, events[:cut_idx])
+    assert rep is not None
+    assert rep["b"]["exhausted"] and not rep["a"]["exhausted"]
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_replay_and_bisect_cli(tmp_path):
+    from repro.trace import main
+    pa = str(tmp_path / "a.trace.jsonl")
+    pb = str(tmp_path / "b.trace.jsonl")
+    request_level_trace(policy="paper").to_jsonl(pa)
+    request_level_trace(policy="slo_headroom").to_jsonl(pb)
+    assert main(["replay", pa]) == 0
+    assert main(["replay", pa, "--json"]) == 0
+    assert main(["bisect", pa, pa]) == 0
+    assert main(["bisect", pa, pb]) == 1
+    # tampered trace: replay exits non-zero
+    events = load_events(pa)
+    bad = [e for e in events if e["type"] != "idle_grant"]
+    pbad = str(tmp_path / "bad.trace.jsonl")
+    with open(pbad, "w") as f:
+        for e in bad:
+            f.write(json.dumps(e) + "\n")
+    assert main(["replay", pbad]) == 1

@@ -366,6 +366,9 @@ def test_campaign_trace_flag_and_bit_exactness(tmp_path):
     traced = run_cell(cell, trace_dir=str(tmp_path))
     assert "trace_file" not in plain
     assert os.path.exists(traced["trace_file"])
+    # filename contract: cell_key (collision-proof hash), not cell_id
+    assert os.path.basename(traced["trace_file"]) \
+        == f"{cell.cell_key()}.trace.jsonl"
     assert traced["trace_summary"]["events"] > 0
     assert _strip_volatile(plain) == _strip_volatile(traced)
     # the spooled trace is analyzable and causally intact

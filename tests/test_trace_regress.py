@@ -1,0 +1,221 @@
+"""Trace regression-gate tests (repro.trace regress + the PR-10 fixes).
+
+Covers:
+
+  * the self-diff property — ``diff_summaries(s, s)`` is all-zero
+    deltas for every registry engine, and ``regress`` passes a golden
+    dir against itself (the CI green path);
+  * the committed golden mix_tiny baseline stays regress-clean and
+    replayable;
+  * drift detection — a different engine under the same cell identity
+    breaches zero thresholds; widened thresholds tolerate it; a missing
+    cell always fails;
+  * the three pinned bugfix regressions: campaign trace filenames are
+    ``<cell_key>.trace.jsonl``, ``diff_summaries`` carries ``faults``
+    and ``unrecovered`` deltas (and the CLI prints the integer ``n``
+    as an integer), and a traced ``--resume`` re-runs spooled cells
+    whose traces are missing instead of emitting a partial trace set.
+"""
+import json
+import os
+import shutil
+
+import pytest
+
+from repro.core.policies import POLICIES
+from repro.core.telemetry import diff_summaries, summarize_events
+from repro.trace import RegressThresholds, check_regression, main
+from test_telemetry import request_level_trace
+
+ENGINES = sorted(POLICIES)
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "goldens",
+                          "mix_tiny_traces")
+
+
+def _summary(policy):
+    tr = request_level_trace(policy=policy)
+    return summarize_events([tr.header()] + tr.events)
+
+
+def _walk_deltas(node, path=""):
+    """Yield every {a, b, delta} leaf in a diff_summaries output."""
+    if isinstance(node, dict):
+        if set(node) == {"a", "b", "delta"}:
+            yield path, node
+        else:
+            for k, v in node.items():
+                yield from _walk_deltas(v, f"{path}.{k}")
+
+
+# ----------------------------------------------------- self-diff property
+
+@pytest.mark.parametrize("policy", ENGINES)
+def test_self_diff_is_all_zero(policy):
+    s = _summary(policy)
+    d = diff_summaries(s, s)
+    leaves = list(_walk_deltas(d))
+    assert leaves, "diff produced no comparable leaves"
+    for path, leaf in leaves:
+        assert leaf["delta"] == 0, (path, leaf)
+    assert check_regression(d, RegressThresholds()) == []
+
+
+def test_diff_carries_faults_and_unrecovered():
+    """Regression: the diff used to ignore the fault ledger and the
+    never-recovered claim counts entirely — fault drift was invisible."""
+    s = _summary("paper")
+    d = diff_summaries(s, s)
+    assert set(d["faults"]) == {"failures", "repairs", "unrepaired",
+                               "suppressed", "drain_completes",
+                               "drained_nodes", "by_cause"}
+    assert "unrecovered" in d
+    # a forged fault ledger must surface as a non-zero delta and breach
+    import copy
+    drifted = copy.deepcopy(s)
+    drifted["faults"]["failures"] += 3
+    drifted["faults"]["by_cause"] = dict(drifted["faults"]["by_cause"])
+    drifted["faults"]["by_cause"]["rack"] = \
+        drifted["faults"]["by_cause"].get("rack", 0) + 3
+    d2 = diff_summaries(s, drifted)
+    assert d2["faults"]["failures"]["delta"] == 3
+    breaches = check_regression(d2, RegressThresholds())
+    assert any("faults" in b for b in breaches)
+    assert check_regression(d2, RegressThresholds(faults=3)) == []
+
+
+def test_diff_cli_prints_integer_n(tmp_path, capsys):
+    """Regression: _cmd_diff formatted the integer reclaim count with
+    :.1f ('n=33.0->34.0'); it must print as an integer."""
+    p = str(tmp_path / "c.trace.jsonl")
+    request_level_trace(policy="paper").to_jsonl(p)
+    assert main(["diff", p, p]) == 0
+    out = capsys.readouterr().out
+    line = next(ln for ln in out.splitlines()
+                if ln.startswith("reclaim latency:"))
+    n_field = next(f for f in line.split() if f.startswith("n="))
+    assert "." not in n_field, line
+
+
+# -------------------------------------------------------- regress gate
+
+def test_regress_golden_baseline_against_itself():
+    assert main(["regress", GOLDEN_DIR, GOLDEN_DIR]) == 0
+
+
+@pytest.mark.parametrize("policy", ENGINES)
+def test_regress_passes_self_for_every_engine(policy, tmp_path):
+    d = str(tmp_path / "base")
+    os.makedirs(d)
+    request_level_trace(policy=policy).to_jsonl(
+        os.path.join(d, "cell.trace.jsonl"))
+    assert main(["regress", d, d]) == 0
+
+
+def test_regress_flags_engine_drift_and_thresholds(tmp_path):
+    """Two engines under the same cell identity: zero thresholds breach,
+    generous thresholds pass (unless event counts themselves moved —
+    those are gated via reclaim-n/slo-count only)."""
+    base, fresh = str(tmp_path / "a"), str(tmp_path / "b")
+    os.makedirs(base), os.makedirs(fresh)
+    request_level_trace(policy="paper").to_jsonl(
+        os.path.join(base, "cell.trace.jsonl"))
+    request_level_trace(policy="slo_headroom").to_jsonl(
+        os.path.join(fresh, "cell.trace.jsonl"))
+    assert main(["regress", base, fresh]) == 1
+    assert main(["regress", base, fresh,
+                 "--reclaim-p99-s", "1e9", "--reclaim-n", "1000000",
+                 "--slo-count", "1000000",
+                 "--slo-p99-duration-s", "1e9", "--spend", "1e9",
+                 "--faults", "1000000",
+                 "--unrecovered", "1000000"]) == 0
+
+
+def test_regress_missing_cell_fails(tmp_path):
+    fresh = str(tmp_path / "fresh")
+    os.makedirs(fresh)
+    shutil.copy(os.path.join(GOLDEN_DIR, sorted(
+        f for f in os.listdir(GOLDEN_DIR)
+        if f.endswith(".trace.jsonl"))[0]), fresh)
+    assert main(["regress", GOLDEN_DIR, fresh]) == 1
+    # extra (unmatched) fresh cells alone never fail the gate
+    assert main(["regress", fresh, GOLDEN_DIR]) == 0
+
+
+def test_regress_json_report(tmp_path, capsys):
+    assert main(["regress", GOLDEN_DIR, GOLDEN_DIR, "--json"]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["breaches"] == 0 and not rep["missing"]
+    assert len(rep["cells"]) == 7
+    for cell in rep["cells"].values():
+        assert cell["breaches"] == []
+        assert "faults" in cell["diff"]
+
+
+# --------------------------------------------- golden baseline contract
+
+def test_golden_baseline_replays_and_is_keyed_by_cell_key():
+    """Every committed golden trace replays cleanly, and its filename is
+    the header's cell_key (the collision-proof identity), with the
+    human-readable cell_id preserved in the header."""
+    from repro.core.replay import replay_events
+    from repro.core.telemetry import load_events
+    files = sorted(f for f in os.listdir(GOLDEN_DIR)
+                   if f.endswith(".trace.jsonl"))
+    assert len(files) == len(ENGINES)        # one mix_tiny cell per engine
+    policies = set()
+    for fn in files:
+        events = load_events(os.path.join(GOLDEN_DIR, fn))
+        header = events[0]
+        assert fn == f"{header['cell_key']}.trace.jsonl"
+        assert header["cell_id"]
+        policies.add(header["policy"])
+        res = replay_events(events)
+        assert res.ok, (fn, res.problems[:3])
+    assert policies == set(ENGINES)
+
+
+# ----------------------------------------------- campaign bugfix pins
+
+CELL_KW = dict(preempt="kill", scheduler="first_fit", arrival="poisson",
+               total_nodes=24, slo_target_s=30.0, horizon_s=1800.0,
+               n_jobs=10, rate_rps=1.0, mix="2hpc2ws")
+
+
+def test_campaign_trace_filename_is_cell_key(tmp_path):
+    """Regression: _cell_finish wrote <cell_id>.trace.jsonl, breaking
+    the documented <cell_key>.trace.jsonl contract."""
+    from repro.workloads.campaign import ScenarioCell, run_cell
+    cell = ScenarioCell(policy="paper", **CELL_KW)
+    row = run_cell(cell, trace_dir=str(tmp_path))
+    assert os.path.basename(row["trace_file"]) \
+        == f"{cell.cell_key()}.trace.jsonl"
+    assert os.path.exists(row["trace_file"])
+
+
+def test_traced_resume_reruns_untraced_spooled_cells(tmp_path):
+    """Regression: --resume --trace skipped spooled cells outright, so a
+    spool from an UNTRACED run yielded an incomplete trace dir and rows
+    without trace_summary."""
+    from repro.workloads.campaign import ScenarioCell, run_campaign
+    cells = [ScenarioCell(policy=p, **CELL_KW)
+             for p in ("paper", "slo_headroom")]
+    spool = str(tmp_path / "spool.jsonl")
+    tdir = str(tmp_path / "traces")
+    art0 = run_campaign(cells, spool_path=spool)
+    assert art0["n_cells"] == 2
+    # traced resume must RE-RUN both spooled-but-untraced cells
+    art1 = run_campaign(cells, spool_path=spool, resume=True,
+                        trace_dir=tdir)
+    assert art1["throughput"]["executed"] == 2
+    assert art1["throughput"]["skipped"] == 0
+    traces = {f for f in os.listdir(tdir) if f.endswith(".trace.jsonl")}
+    assert traces == {f"{c.cell_key()}.trace.jsonl" for c in cells}
+    assert all("trace_summary" in r for r in art1["cells"])
+    # once traces exist, a traced resume skips as before
+    art2 = run_campaign(cells, spool_path=spool, resume=True,
+                        trace_dir=tdir)
+    assert art2["throughput"]["executed"] == 0
+    assert art2["throughput"]["skipped"] == 2
+    # untraced resume behavior is unchanged by the fix
+    art3 = run_campaign(cells, spool_path=spool, resume=True)
+    assert art3["throughput"]["executed"] == 0
